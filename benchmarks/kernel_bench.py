@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: exact vs LUT-gather vs low-rank approximate
+matmul (jnp lowering; the Pallas interpret path is correctness-only on
+CPU), plus the bit-parallel netlist simulator vs naive evaluation.
+
+These are CPU wall-times — NOT the roofline numbers (those come from the
+dry-run cost analysis); they document the relative algorithmic weight
+of the three emulation strategies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.backend import MatmulBackend, backend_matmul
+from repro.core import seeds
+from repro.core.luts import decompose_lut, exact_mul_lut
+from repro.core.netlist import exhaustive_inputs
+from repro.kernels import ops
+
+from .common import emit, time_call
+
+M, K, N = 256, 512, 256
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    lut = exact_mul_lut(8)
+    fac = decompose_lut(lut, 4)
+
+    backends = {
+        "bf16": MatmulBackend(mode="bf16"),
+        "int8": MatmulBackend(mode="int8"),
+        "lut_gather": MatmulBackend(mode="lut", lut=lut),
+        "lowrank_r4": MatmulBackend(mode="lowrank",
+                                    factors_u=np.asarray(fac.u),
+                                    factors_v=np.asarray(fac.v)),
+    }
+    for name, be in backends.items():
+        fn = jax.jit(lambda a, b, _be=be: backend_matmul(a, b, _be))
+        fn(x, w).block_until_ready()
+        us = time_call(lambda: fn(x, w).block_until_ready(), iters=3)
+        emit(f"kernel/approx_matmul/{name}", us, f"{M}x{K}x{N}")
+
+    # bitsim: exhaustive 8x8 multiplier eval (65 536 vectors)
+    nl = seeds.array_multiplier(8)
+    planes = exhaustive_inputs(16)
+    us_np = time_call(lambda: nl.eval_words(planes), iters=3)
+    emit("kernel/bitsim/numpy_bitparallel", us_np, "65536 vectors")
+    us_k = time_call(lambda: ops.bitsim(nl, planes), iters=3)
+    emit("kernel/bitsim/pallas_interpret", us_k, "65536 vectors")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Paper Table I: number of approximate implementations per circuit
+kind and bit-width in the library."""
+from __future__ import annotations
+
+from repro.core.library import get_default_library
+
+from .common import emit, time_call
+
+
+def run() -> None:
+    lib = get_default_library()
+    us = time_call(lib.counts_table, iters=3)
+    for row in lib.counts_table():
+        emit(f"table_I/{row['circuit']}_{row['bit_width']}b", us,
+             f"n={row['n_implementations']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,139 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+the dry-run result JSONs (idempotent; §Perf and prose are maintained by
+hand between the markers)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    out.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9),
+                            r.get("multi_pod", False)))
+    return out
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 1e9:.2f}"
+
+
+def dryrun_table(results) -> str:
+    rows = ["| arch | shape | mesh | compile | peak GB/dev | "
+            "collective GB/dev | status |",
+            "|---|---|---|---|---|---|---|"]
+    for r in results:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | - |"
+                        f" - | FAIL: {r.get('error', '?')[:60]} |")
+            continue
+        coll = r["collectives"].get("total_bytes", 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {r['compile_s']}s | {r['memory']['peak_gb']:.1f} "
+            f"| {fmt_bytes(coll)} | OK |")
+    return "\n".join(rows)
+
+
+def roofline_table(results) -> str:
+    rows = ["| arch | shape | kind | compute s | memory s | collective s"
+            " | bottleneck | useful FLOPs ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if not r.get("ok") or r.get("multi_pod"):
+            continue  # roofline table is single-pod per the brief
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | **{rf['bottleneck']}** "
+            f"| {rf['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+HILLCLIMB = os.path.join(os.path.dirname(__file__), "results",
+                         "hillclimb")
+
+_PERF_NOTES = {
+    ".A1_moeblocks": "A1 block-local MoE dispatch (moe_blocks=16)",
+    ".A2_flash": "A2 = A1 + chunked attention",
+    ".A3_cap1": "A3 = A1 + capacity_factor 1.0",
+    ".B1_flashmla": "B1 chunked (flash) MLA attention",
+    ".B2_moeblocks": "B2 = B1 + block-local MoE dispatch",
+    ".B3_losschunk": "B3 = B2 + loss_chunk 256",
+    ".C1_prepared": "C1 offline-prepared bf16 weight tables (rank 4)",
+    ".C2_rank2": "C2 = prepared + rank 2",
+    ".C3_int8_reference": "C3 reference: exact-int8 datapath (no emulation)",
+}
+
+
+def perf_table() -> str:
+    cells = [("qwen3-moe-30b-a3b", "train_4k"),
+             ("deepseek-v2-236b", "train_4k"),
+             ("yi-34b", "decode_32k")]
+    out = []
+    for arch, shape in cells:
+        base_p = os.path.join(RESULTS, f"{arch}_{shape}_sp.json")
+        if not os.path.exists(base_p):
+            continue
+        rows = [f"**{arch} / {shape}**", "",
+                "| variant | compute s | memory s | collective s | "
+                "bottleneck | useful | roofline frac | peak GB |",
+                "|---|---|---|---|---|---|---|---|"]
+        entries = [("baseline", json.load(open(base_p)))]
+        for tag, note in _PERF_NOTES.items():
+            p = os.path.join(HILLCLIMB, f"{arch}_{shape}_sp{tag}.json")
+            if os.path.exists(p):
+                entries.append((note, json.load(open(p))))
+        for name, r in entries:
+            if not r.get("ok"):
+                rows.append(f"| {name} | - | - | - | FAIL | - | - | - |")
+                continue
+            rf = r["roofline"]
+            rows.append(
+                f"| {name} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f}"
+                f" | {rf['collective_s']:.3f} | {rf['bottleneck']} "
+                f"| {rf['useful_flops_ratio']:.3f} "
+                f"| {rf['roofline_fraction']:.4f} "
+                f"| {r['memory']['peak_gb']:.1f} |")
+        out.append("\n".join(rows))
+    return "\n\n".join(out) if out else "(hillclimb results pending)"
+
+
+def replace_section(text: str, marker: str, body: str) -> str:
+    begin = f"<!-- BEGIN AUTO {marker} -->"
+    end = f"<!-- END AUTO {marker} -->"
+    if begin not in text:
+        return text + f"\n{begin}\n{body}\n{end}\n"
+    pre = text.split(begin)[0]
+    post = text.split(end)[1]
+    return pre + begin + "\n" + body + "\n" + end + post
+
+
+def main() -> None:
+    results = load()
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read() if os.path.exists(path) else "# EXPERIMENTS\n"
+    text = replace_section(text, "DRYRUN", dryrun_table(results))
+    text = replace_section(text, "ROOFLINE", roofline_table(results))
+    text = replace_section(text, "PERF", perf_table())
+    with open(path, "w") as f:
+        f.write(text)
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"wrote {path}: {ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 2: power vs MAE Pareto front of 8-bit multipliers —
+evolved circuits must trade off at least as well as the manual
+truncation/BAM families at comparable power."""
+from __future__ import annotations
+
+from repro.core.library import get_default_library
+
+from .common import emit, time_call
+
+
+def run() -> None:
+    lib = get_default_library()
+    us = time_call(lambda: lib.pareto_front("multiplier", 8, "mae"),
+                   iters=3)
+    front = lib.pareto_front("multiplier", 8, "mae")
+    for e in front:
+        emit(f"fig_2/front/{e.name}", us,
+             f"power={e.rel_power:.4f};mae={e.errors.mae:.3f};"
+             f"src={e.source}")
+    # dominance check: fraction of manual circuits strictly dominated by
+    # some front circuit (the Fig. 2 "blue beats red" claim)
+    manual = [e for e in lib.select("multiplier", 8)
+              if e.source in ("truncation", "bam")]
+    dominated = 0
+    for m in manual:
+        if any(f.rel_power <= m.rel_power and f.errors.mae < m.errors.mae
+               for f in front):
+            dominated += 1
+    emit("fig_2/manual_dominated_fraction", us,
+         f"{dominated}/{len(manual)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Low-rank decomposability of the case-study multipliers (DESIGN.md
+§4.2): for each selected multiplier, the rank needed for the emulation
+error (decomposition MAE) to fall below 10% of the circuit's own MAE —
+the knob that converts the VPU-gather emulation into MXU matmuls."""
+from __future__ import annotations
+
+import time
+
+from repro.core.library import get_default_library
+from repro.core.luts import rank_profile
+
+from .common import emit
+
+
+def run() -> None:
+    lib = get_default_library()
+    sel = lib.case_study_selection(per_metric=10)
+    for e in sel:
+        t0 = time.time()
+        lut = lib.lut(e.name)
+        prof = rank_profile(lut, 8)
+        us = (time.time() - t0) * 1e6
+        tol = max(0.25, 0.1 * e.errors.mae)
+        need = next((p["rank"] for p in prof if p["mae"] <= tol), ">8")
+        emit(f"rank/{e.name}", us,
+             f"circuit_mae={e.errors.mae:.3f};rank_needed={need};"
+             f"mae_r1={prof[0]['mae']:.3f};mae_r4={prof[3]['mae']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

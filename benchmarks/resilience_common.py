@@ -1,0 +1,65 @@
+"""Shared trained-model fixture for the resilience benchmarks: trains
+ResNet-8 on synthetic CIFAR once and caches the checkpoint."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import CifarBatches
+from repro.models import resnet
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import Trainer, TrainLoopConfig
+from repro.train.optimizer import OptimizerConfig
+
+from repro.data.synthetic import DATA_VERSION
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "results",
+                        f"resnet8_ckpt_v{DATA_VERSION}")
+TRAIN_STEPS = 320
+
+
+def trained_resnet(depth: int = 8):
+    cfg = resnet.resnet_config(depth)
+    params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(CKPT_DIR, keep=1)
+    if mgr.latest_step() is not None and depth == 8:
+        (params, _), _ = mgr.restore((params, params))
+        return cfg, params
+    train_data = CifarBatches("train", 4096, 64)
+
+    def batches():
+        while True:
+            for b in train_data.epoch():
+                yield {"images": jnp.asarray(b["images"]),
+                       "labels": jnp.asarray(b["labels"])}
+
+    trainer = Trainer(lambda p, b: resnet.loss_fn(p, b, cfg), params,
+                      OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                      total_steps=TRAIN_STEPS,
+                                      weight_decay=1e-4),
+                      TrainLoopConfig(total_steps=TRAIN_STEPS,
+                                      ckpt_every=10 ** 9,
+                                      ckpt_dir="/tmp/repro_bench_tmp",
+                                      log_every=10 ** 9))
+    trainer.run(batches(), log=lambda s: None)
+    params = trainer.params
+    if depth == 8:
+        mgr.save(TRAIN_STEPS, (params, params))
+    return cfg, params
+
+
+def make_eval_fn(cfg, params, eval_n: int = 256, batch: int = 64):
+    data = CifarBatches("test", eval_n, batch)
+    eval_batches = list(data.eval_batches())
+
+    def eval_fn(policy):
+        fwd = jax.jit(lambda p, im: resnet.forward(p, im, cfg, policy))
+        accs = [np.mean(np.argmax(np.asarray(
+            fwd(params, jnp.asarray(b["images"]))), -1) == b["labels"])
+            for b in eval_batches]
+        return float(np.mean(accs))
+
+    return eval_fn

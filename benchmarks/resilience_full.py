@@ -1,0 +1,47 @@
+"""Paper Table II: multiplier characterization x classification accuracy
+with the same approximate multiplier in every conv layer (trained
+ResNet-8 on synthetic CIFAR; evolved + truncation + BAM entries)."""
+from __future__ import annotations
+
+import time
+
+from repro.approx.resilience import all_layers_sweep
+from repro.core.library import get_default_library
+from repro.models import resnet
+
+from .common import emit
+from .resilience_common import make_eval_fn, trained_resnet
+
+
+def run(n_mult: int = 8) -> None:
+    lib = get_default_library()
+    cfg, params = trained_resnet(8)
+    eval_fn = make_eval_fn(cfg, params)
+
+    from repro.approx.layers import ApproxPolicy
+    from repro.approx.backend import MatmulBackend
+    t0 = time.time()
+    acc_f32 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="f32")))
+    acc_int8 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="int8")))
+    us = (time.time() - t0) / 2 * 1e6
+    emit("table_II/float", us, f"acc={acc_f32:.4f};power=1.0")
+    emit("table_II/8bit_exact_golden", us,
+         f"acc={acc_int8:.4f};power=1.0")
+
+    sel = lib.case_study_selection(per_metric=10)
+    names = [e.name for e in sel][:n_mult]
+    # always include the paper's baselines
+    for extra in ("mul8u_trunc7", "mul8u_trunc6", "mul8u_bam_h0_v4"):
+        if extra in lib.entries and extra not in names:
+            names.append(extra)
+    counts = resnet.layer_mult_counts(cfg)
+    rows = all_layers_sweep(eval_fn, counts, names, lib, mode="lut")
+    for r in sorted(rows, key=lambda r: -r.network_rel_power):
+        emit(f"table_II/{r.multiplier}", us,
+             f"acc={r.accuracy:.4f};power={r.network_rel_power:.4f};"
+             f"mae={r.errors['mae']:.3f};wce={r.errors['wce']:.0f};"
+             f"er={r.errors['er']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 4: accuracy drop vs power drop when approximate
+multipliers are inserted into ONE layer of ResNet-8 at a time; layers
+with a larger multiplier share should show proportionally larger
+impact."""
+from __future__ import annotations
+
+import time
+
+from repro.approx.resilience import per_layer_sweep
+from repro.core.library import get_default_library
+from repro.models import resnet
+
+from .common import emit
+from .resilience_common import make_eval_fn, trained_resnet
+
+
+def run(n_mult: int = 3) -> None:
+    lib = get_default_library()
+    cfg, params = trained_resnet(8)
+    eval_fn = make_eval_fn(cfg, params)
+    sel = lib.case_study_selection(per_metric=10)
+    # spread: near-exact, mid, aggressive
+    names = [sel[1].name, sel[len(sel) // 2].name, sel[-1].name][:n_mult]
+    counts = resnet.layer_mult_counts(cfg)
+    t0 = time.time()
+    rows = per_layer_sweep(eval_fn, counts, names, lib, mode="lut")
+    us = (time.time() - t0) / max(len(rows), 1) * 1e6
+    for r in rows:
+        emit(f"fig_4/{r.layer}/{r.multiplier}", us,
+             f"acc={r.accuracy:.4f};share={r.mult_share:.4f};"
+             f"net_power={r.network_rel_power:.4f}")
+
+
+if __name__ == "__main__":
+    run()

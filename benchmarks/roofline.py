@@ -1,0 +1,53 @@
+"""Roofline summary (deliverable g): reads the dry-run JSONs and prints
+the per-cell three-term roofline table.  The dry-run itself
+(repro.launch.dryrun) must have been run first — it needs the
+512-device placeholder env and therefore lives in its own process."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_results() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> None:
+    results = load_results()
+    if not results:
+        emit("roofline/NO_RESULTS", 0.0,
+             "run benchmarks/run_dryrun_sweep.sh first")
+        return
+    for r in results:
+        tag = f"{r['arch']}/{r['shape']}/{'mp' if r['multi_pod'] else 'sp'}"
+        if not r.get("ok"):
+            emit(f"roofline/{tag}", 0.0, f"FAIL:{r.get('error', '?')[:60]}")
+            continue
+        if r.get("multi_pod") or not r.get("probe_details"):
+            # multi-pod cells are compile-only (no unrolled probes):
+            # report the deliverable facts, not roofline terms
+            emit(f"roofline/{tag}", r["compile_s"] * 1e6,
+                 f"compile_only;mem_gb={r['memory']['peak_gb']:.1f}")
+            continue
+        rf = r["roofline"]
+        emit(f"roofline/{tag}", r["compile_s"] * 1e6,
+             f"bottleneck={rf['bottleneck']};"
+             f"compute={rf['compute_s']:.4f}s;"
+             f"memory={rf['memory_s']:.4f}s;"
+             f"collective={rf['collective_s']:.4f}s;"
+             f"frac={rf['roofline_fraction']:.4f};"
+             f"useful={rf['useful_flops_ratio']:.3f};"
+             f"mem_gb={r['memory']['peak_gb']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

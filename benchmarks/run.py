@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure plus the
+framework's kernel/rank/roofline analyses.  Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table_I,fig_2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = {
+    "table_I": ("benchmarks.library_stats", "Table I: library counts"),
+    "fig_2": ("benchmarks.pareto_front", "Fig 2: 8-bit mult Pareto front"),
+    "fig_4": ("benchmarks.resilience_per_layer",
+              "Fig 4: per-layer resilience"),
+    "table_II": ("benchmarks.resilience_full",
+                 "Table II: multiplier x accuracy"),
+    "kernels": ("benchmarks.kernel_bench", "kernel micro-benchmarks"),
+    "rank": ("benchmarks.rank_analysis", "LUT low-rank analysis"),
+    "roofline": ("benchmarks.roofline", "dry-run roofline table"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    todo = (args.only.split(",") if args.only else list(SUITES))
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key in todo:
+        mod_name, desc = SUITES[key]
+        print(f"# {key}: {desc}", file=sys.stderr, flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failed.append(key)
+            traceback.print_exc()
+            print(f"{key}/SUITE_FAILED,0,", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

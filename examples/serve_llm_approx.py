@@ -1,0 +1,76 @@
+"""Serve a small LM with batched requests on the emulated
+approximate-multiplier accelerator, comparing datapaths:
+float (bf16) vs exact-int8 vs approximate (lowrank emulation).
+
+    PYTHONPATH=src python examples/serve_llm_approx.py [--batch 4]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.library import get_default_library
+from repro.launch.steps import serve_policy, train_policy
+from repro.models.registry import model_fns
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+
+    lib = get_default_library()
+    # mildest non-exact Pareto multiplier: on an *untrained* model the
+    # logit gaps are tiny, so a large-MAE circuit trivially flips
+    # argmaxes — the mild one demonstrates faithful emulation instead
+    front = lib.pareto_front("multiplier", 8, "mae")
+    mult = min((e for e in front if e.source != "exact"),
+               key=lambda e: e.errors.mae).name
+    entry = lib.entries[mult]
+    print(f"[serve] {args.arch} (reduced), approximate multiplier: "
+          f"{mult} (power {100 * entry.rel_power:.1f}%, "
+          f"MAE {entry.errors.mae:.2f})")
+
+    logits = {}
+    for name, policy in [
+        ("bf16 (float)", train_policy()),
+        ("int8 exact (golden)", serve_policy(mult, "int8")),
+        ("approx lowrank", serve_policy(mult, "lowrank")),
+    ]:
+        engine = Engine(cfg, params, policy)
+        t0 = time.time()
+        out = engine.generate(prompts, ServeConfig(max_new_tokens=args.max_new))
+        dt = time.time() - t0
+        import jax.numpy as jnp
+        cache = fns.init_cache(cfg, args.batch, args.prompt_len + 1)
+        lg, _ = engine._prefill(params, {"tokens": jnp.asarray(prompts)},
+                                cache)
+        logits[name] = np.asarray(lg)
+        print(f"  {name:<22} {args.batch * args.max_new / dt:>7.1f} tok/s "
+              f"first tokens: {out[0][:6]}")
+
+    ref = logits["int8 exact (golden)"]
+    scale = np.abs(ref).max() + 1e-9
+    for name in ("bf16 (float)", "approx lowrank"):
+        err = np.abs(logits[name] - ref).max() / scale
+        print(f"  max |logit delta| vs int8 golden — {name}: {err:.4f}")
+    print("  (untrained model: logit margins are ~0, so token streams "
+          "diverge under ANY perturbation; the logit deltas above show "
+          "the emulated datapath tracks the golden int8 path, scaled by "
+          "the chosen circuit's arithmetic error)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .quant import QuantParams, quantize, dequantize, calibrate
+from .backend import MatmulBackend, backend_matmul
+from .layers import ApproxPolicy

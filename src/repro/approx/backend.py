@@ -1,0 +1,290 @@
+"""Matmul backends: the accelerator datapath being emulated.
+
+Every projection matmul in every model flows through ``backend_matmul``.
+Modes:
+
+  * ``f32`` / ``bf16`` — exact float (the paper's pre-quantization net)
+  * ``int8``           — exact uint8-quantized datapath (the paper's
+                         "golden" 8-bit multiplier)
+  * ``lut``            — approximate multiplier, bit-true 256x256 LUT
+                         emulation (TFApprox port; paper-faithful)
+  * ``lowrank``        — approximate multiplier, rank-R factored LUT:
+                         R 256-entry table lookups + R MXU matmuls
+                         (TPU-native adaptation, DESIGN.md §4.2)
+
+Gradients: straight-through estimator — backward pass is the exact f32
+matmul VJP, enabling beyond-paper approximate-aware training (the paper
+itself performs no retraining).
+
+int32 accumulation of raw uint8 code products is bit-safe for
+K < 2^31 / 255^2 = 33 030, which covers every assigned architecture
+(max contraction dim = 24 576, nemotron-4-15b d_ff).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantParams, calibrate, quantize
+
+MAX_LUT_K = 33030
+
+
+@dataclass(frozen=True, eq=False)  # eq=False: id-hash (ndarray fields)
+class MatmulBackend:
+    mode: str = "bf16"                       # f32|bf16|int8|lut|lowrank
+    multiplier: str = "mul8u_exact"          # library entry name
+    lut: Optional[np.ndarray] = None         # (256,256) int32 product LUT
+    factors_u: Optional[np.ndarray] = None   # (R,256) f32
+    factors_v: Optional[np.ndarray] = None   # (R,256) f32
+    rank: int = 0
+    block_m: int = 512                       # LUT-emulation row blocking
+    ste: bool = True                         # straight-through gradients
+    use_pallas: bool = False                 # route through Pallas kernels
+
+    @staticmethod
+    def exact(mode: str = "bf16") -> "MatmulBackend":
+        return MatmulBackend(mode=mode)
+
+    @staticmethod
+    def from_library(
+        name: str,
+        mode: str = "lut",
+        rank: Optional[int] = None,
+        library=None,
+        use_pallas: bool = False,
+    ) -> "MatmulBackend":
+        """Build a backend emulating library multiplier ``name``."""
+        from repro.core.library import get_default_library
+        from repro.core.luts import decompose_lut, rank_for_tolerance
+        lib = library if library is not None else get_default_library()
+        lut = np.asarray(lib.lut(name), dtype=np.int32)
+        if rank is None:
+            # pick R so decomposition error is negligible next to the
+            # circuit's own error (floor 0.25 LSB^2 for near-exact circuits)
+            mult_mae = max(lib.entries[name].errors.mae, 0.0)
+            tol = max(0.25, 0.1 * mult_mae)
+            rank = rank_for_tolerance(lut, tol, max_rank=16)
+        fac = decompose_lut(lut, rank)
+        return MatmulBackend(
+            mode=mode, multiplier=name, lut=lut,
+            factors_u=np.asarray(fac.u), factors_v=np.asarray(fac.v),
+            rank=int(rank), use_pallas=use_pallas,
+        )
+
+
+# ----------------------------------------------------------------------
+# Quantized kernels (operate on uint8 codes stored as int32)
+# ----------------------------------------------------------------------
+def _int8_exact_q(qa: jax.Array, qw: jax.Array, za, zw) -> jax.Array:
+    """Exact Σ (qa-za)(qw-zw) with int32 accumulation."""
+    acc = jax.lax.dot_general(
+        qa, qw, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    k = qa.shape[1]
+    row = jnp.sum(qa, axis=1, dtype=jnp.int32)        # (M,)
+    col = jnp.sum(qw, axis=0, dtype=jnp.int32)        # (N,)
+    return acc - zw * row[:, None] - za * col[None, :] + k * za * zw
+
+
+def _lut_gather_block(qa_blk: jax.Array, qw: jax.Array, flat_lut: jax.Array
+                      ) -> jax.Array:
+    """Σ_k LUT[qa, qw] for one row block. (mb,K) x (K,N) -> (mb,N) i32."""
+    idx = qa_blk[:, :, None] * 256 + qw[None, :, :]        # (mb,K,N)
+    prods = jnp.take(flat_lut, idx, axis=0)                 # (mb,K,N) i32
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+def _lut_matmul_q(qa: jax.Array, qw: jax.Array, flat_lut: jax.Array,
+                  block_m: int) -> jax.Array:
+    """Blocked bit-true LUT matmul on codes. (M,K) x (K,N) -> (M,N) i32."""
+    m, k = qa.shape
+    if k > MAX_LUT_K:
+        raise ValueError(f"K={k} exceeds int32-safe LUT accumulation bound")
+    mb = min(block_m, m)
+    pad = (-m) % mb
+    qa_p = jnp.pad(qa, ((0, pad), (0, 0)))
+    blocks = qa_p.reshape(-1, mb, k)
+    out = jax.lax.map(
+        lambda blk: _lut_gather_block(blk, qw, flat_lut), blocks)
+    return out.reshape(-1, out.shape[-1])[:m]
+
+
+def _lowrank_matmul_q(qa: jax.Array, qw: jax.Array, u: jax.Array,
+                      v: jax.Array) -> jax.Array:
+    """Σ_k Σ_r U[r,qa]V[r,qw]  ==  Σ_r tableU_r(qa) @ tableV_r(qw).
+    (M,K) x (K,N) -> (M,N) f32; R batched MXU matmuls."""
+    ua = jnp.take(u, qa, axis=1)   # (R,M,K) f32
+    vw = jnp.take(v, qw, axis=1)   # (R,K,N) f32
+    return jnp.einsum("rmk,rkn->mn", ua, vw,
+                      preferred_element_type=jnp.float32)
+
+
+def _approx_sum_q(qa, qw, backend: MatmulBackend) -> jax.Array:
+    """Σ_k approx_mul(qa, qw) on raw codes, by emulation mode."""
+    if backend.mode == "lut":
+        if backend.use_pallas:
+            from repro.kernels.ops import approx_matmul_lut
+            return approx_matmul_lut(qa, qw, jnp.asarray(backend.lut))
+        flat = jnp.asarray(backend.lut, dtype=jnp.int32).reshape(-1)
+        return _lut_matmul_q(qa, qw, flat, backend.block_m)
+    if backend.mode == "lowrank":
+        if backend.use_pallas:
+            from repro.kernels.ops import lowrank_matmul
+            return lowrank_matmul(qa, qw, jnp.asarray(backend.factors_u),
+                                  jnp.asarray(backend.factors_v))
+        return _lowrank_matmul_q(qa, qw, jnp.asarray(backend.factors_u),
+                                 jnp.asarray(backend.factors_v))
+    raise ValueError(backend.mode)
+
+
+def _quantized_matmul(x2d: jax.Array, w: jax.Array,
+                      backend: MatmulBackend) -> jax.Array:
+    qp_a = calibrate(x2d)
+    qp_w = calibrate(w)
+    qa = quantize(x2d, qp_a)
+    qw = quantize(w, qp_w)
+    za, zw = qp_a.zero_point, qp_w.zero_point
+    k = x2d.shape[1]
+    if backend.mode == "int8":
+        acc = _int8_exact_q(qa, qw, za, zw).astype(jnp.float32)
+    else:
+        s = _approx_sum_q(qa, qw, backend).astype(jnp.float32)
+        row = jnp.sum(qa, axis=1, dtype=jnp.int32).astype(jnp.float32)
+        col = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
+        zaf, zwf = za.astype(jnp.float32), zw.astype(jnp.float32)
+        acc = s - zwf * row[:, None] - zaf * col[None, :] + k * zaf * zwf
+    return acc * (qp_a.scale * qp_w.scale)
+
+
+# ----------------------------------------------------------------------
+# Public entry point with STE gradients
+# ----------------------------------------------------------------------
+def _forward_2d(x2d: jax.Array, w: jax.Array, backend: MatmulBackend
+                ) -> jax.Array:
+    if backend.mode == "f32":
+        return jnp.dot(x2d, w, preferred_element_type=jnp.float32)
+    if backend.mode == "bf16":
+        return jnp.dot(x2d.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    return _quantized_matmul(x2d.astype(jnp.float32),
+                             w.astype(jnp.float32), backend)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _ste_matmul(x2d, w, backend):
+    return _forward_2d(x2d, w, backend)
+
+
+def _ste_fwd(x2d, w, backend):
+    return _forward_2d(x2d, w, backend), (x2d, w)
+
+
+def _ste_bwd(backend, res, g):
+    x2d, w = res
+    g = g.astype(jnp.float32)
+    dx = jnp.dot(g, w.T.astype(jnp.float32)).astype(x2d.dtype)
+    dw = jnp.dot(x2d.T.astype(jnp.float32), g).astype(w.dtype)
+    return dx, dw
+
+
+_ste_matmul.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ----------------------------------------------------------------------
+# Prepared weights (beyond-paper serving optimization, EXPERIMENTS §Perf)
+# ----------------------------------------------------------------------
+# The weight-side rank tables V_r(q_w) are STATIC per checkpoint: a real
+# deployment precomputes them offline.  ``prepare_weight`` replaces a
+# projection weight leaf with {tabs: (R,K,N) bf16, colsum, scales},
+# turning per-step work into R plain matmuls — no weight requantization,
+# no f32 table gather, 2 bytes/element instead of 4.
+def prepare_weight(w, backend: MatmulBackend) -> dict:
+    w = jnp.asarray(w, jnp.float32)
+    qp_w = calibrate(w)
+    qw = quantize(w, qp_w)
+    v = jnp.asarray(backend.factors_v)            # (R,256)
+    tabs = jnp.take(v, qw, axis=1).astype(jnp.bfloat16)   # (R,K,N)
+    colsum = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
+    return {
+        "tabs": tabs,
+        "colsum": colsum,
+        "w_scale": qp_w.scale,
+        "w_zp": qp_w.zero_point.astype(jnp.float32),
+    }
+
+
+def is_prepared(w) -> bool:
+    return isinstance(w, dict) and "tabs" in w
+
+
+def _prepared_matmul(x2d: jax.Array, pw: dict,
+                     backend: MatmulBackend) -> jax.Array:
+    qp_a = calibrate(x2d)
+    qa = quantize(x2d, qp_a)
+    u = jnp.asarray(backend.factors_u)            # (R,256)
+    ua = jnp.take(u, qa, axis=1).astype(jnp.bfloat16)     # (R,M,K)
+    y_q = jax.lax.dot_general(
+        ua, pw["tabs"], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).sum(axis=0)   # (M,N)
+    k = x2d.shape[1]
+    row = jnp.sum(qa, axis=1, dtype=jnp.int32).astype(jnp.float32)
+    zaf = qp_a.zero_point.astype(jnp.float32)
+    acc = (y_q - pw["w_zp"] * row[:, None] - zaf * pw["colsum"][None, :]
+           + k * zaf * pw["w_zp"])
+    return acc * (qp_a.scale * pw["w_scale"])
+
+
+_PROJECTION_LEAVES = frozenset({
+    "wq", "wk", "wv", "wo", "wi", "wg", "in_proj", "out_proj",
+    "wuq", "wdq", "wqr", "wdkv", "wuk", "wuv", "wkr", "img_proj",
+})
+
+
+def prepare_tree(params, backend: MatmulBackend):
+    """Pre-pack every projection weight in a param pytree for lowrank
+    serving (DESIGN.md §4.2, §Perf).  Handles stacked leading dims
+    (scan groups, experts) by vmapping ``prepare_weight``."""
+    def pack(v):
+        fn = prepare_weight
+        for _ in range(v.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn(v, backend)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if (k in _PROJECTION_LEAVES and hasattr(v, "ndim")
+                        and v.ndim >= 2):
+                    out[k] = pack(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(params)
+
+
+def backend_matmul(x: jax.Array, w, backend: Optional[MatmulBackend] = None
+                   ) -> jax.Array:
+    """x: (..., K) @ w: (K, N) -> (..., N) f32 through the selected
+    accelerator datapath.  ``w`` may be a prepared-weight dict."""
+    backend = backend or MatmulBackend()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2d = x.reshape(-1, k)
+    if is_prepared(w):
+        y = _prepared_matmul(x2d.astype(jnp.float32), w, backend)
+        return y.reshape(*lead, y.shape[-1])
+    if backend.mode in ("f32", "bf16") or not backend.ste:
+        y = _forward_2d(x2d, w, backend)
+    else:
+        y = _ste_matmul(x2d, w, backend)
+    return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,92 @@
+"""Layer-level integration: injection policy + approx dense/conv.
+
+``ApproxPolicy`` maps layer names to ``MatmulBackend``s — the unit of
+the paper's resilience analysis ("only one layer was modified and one
+type of approximate multiplier was used in each experiment").  Models
+route every projection through ``policy.matmul(name, x, w)`` and report
+their multiplication counts per layer for the power model.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .backend import MatmulBackend, backend_matmul
+
+
+@dataclass
+class ApproxPolicy:
+    """default backend + per-layer-pattern overrides (fnmatch globs,
+    first match wins)."""
+    default: MatmulBackend = field(default_factory=MatmulBackend)
+    overrides: list[tuple[str, MatmulBackend]] = field(default_factory=list)
+
+    def backend_for(self, name: str) -> MatmulBackend:
+        for pat, be in self.overrides:
+            if fnmatch.fnmatch(name, pat):
+                return be
+        return self.default
+
+    def matmul(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
+        return backend_matmul(x, w, self.backend_for(name))
+
+    def with_override(self, pattern: str, backend: MatmulBackend
+                      ) -> "ApproxPolicy":
+        return ApproxPolicy(default=self.default,
+                            overrides=[(pattern, backend)] + list(self.overrides))
+
+
+EXACT_POLICY = ApproxPolicy(default=MatmulBackend(mode="f32"))
+
+
+def dense(policy: ApproxPolicy, name: str, x: jax.Array, w: jax.Array,
+          b: Optional[jax.Array] = None) -> jax.Array:
+    y = policy.matmul(name, x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv2d(policy: ApproxPolicy, name: str, x: jax.Array, w: jax.Array,
+           stride: int = 1, padding: str = "SAME",
+           b: Optional[jax.Array] = None) -> jax.Array:
+    """NHWC conv via im2col + backend matmul, so the multiplier
+    emulation covers convolutions exactly as TFApprox's AxConv2D does.
+
+    x: (B,H,W,Cin), w: (kh,kw,Cin,Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, Ho, Wo, kh*kw*cin) with feature dim ordered (cin, kh, kw)
+    bsz, ho, wo, feat = patches.shape
+    # conv_general_dilated_patches yields features ordered as
+    # (cin, kh, kw); reorder w to match.
+    w2d = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    y = policy.matmul(name, patches.reshape(-1, feat), w2d)
+    y = y.reshape(bsz, ho, wo, cout)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv_mult_count(x_shape, w_shape, stride: int = 1) -> int:
+    """Number of scalar multiplications in this conv (power model)."""
+    bsz, h, w_, cin = x_shape
+    kh, kw, _, cout = w_shape
+    ho, wo = h // stride, w_ // stride
+    return bsz * ho * wo * kh * kw * cin * cout
+
+
+def dense_mult_count(x_shape, w_shape) -> int:
+    m = 1
+    for d in x_shape[:-1]:
+        m *= d
+    k, n = w_shape
+    return m * k * n

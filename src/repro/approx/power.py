@@ -1,0 +1,31 @@
+"""Power model: relative multiplier power aggregated over a network.
+
+The paper reports "power consumption of multipliers in convolutional
+layers" relative to the exact 8-bit datapath (Table II / Fig. 4).  Given
+per-layer multiplication counts and the per-layer multiplier assignment,
+the relative power is the count-weighted mean of the multipliers'
+relative powers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LayerPower:
+    name: str
+    mult_count: int
+    multiplier: str
+    rel_power: float
+
+
+def network_relative_power(layers: list[LayerPower]) -> float:
+    total = sum(l.mult_count for l in layers)
+    if total == 0:
+        return 1.0
+    return sum(l.mult_count * l.rel_power for l in layers) / total
+
+
+def per_layer_share(layers: list[LayerPower]) -> dict[str, float]:
+    total = sum(l.mult_count for l in layers)
+    return {l.name: l.mult_count / total for l in layers}

@@ -1,0 +1,55 @@
+"""uint8 affine quantization for approximate-multiplier emulation.
+
+The library's multipliers are *unsigned* 8-bit (mul8u family), so both
+operands are quantized asymmetrically to [0, 255]:
+
+    q = clip(round(x / s) + zp, 0, 255),      x ≈ s * (q - zp)
+
+and an exact product decomposes as
+
+    (qa - za)(qw - zw) = qa*qw - za*qw - zw*qa + za*zw .
+
+Only the qa*qw term flows through the (approximate) multiplier; the
+correction terms are row/column sums computed exactly — this mirrors how
+a real accelerator datapath applies zero-point corrections outside the
+MAC array, and is exactly how TFApprox composes with TF quantization.
+
+Quantization is *dynamic* per-tensor by default (scales derived from the
+tensor inside the jitted computation); static calibrated params can be
+passed instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantParams(NamedTuple):
+    scale: jax.Array        # scalar f32
+    zero_point: jax.Array   # scalar int32 in [0, 255]
+
+
+def calibrate(x: jax.Array, eps: float = 1e-8) -> QuantParams:
+    """Min/max affine calibration to the full uint8 range."""
+    lo = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    hi = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    scale = jnp.maximum((hi - lo) / 255.0, eps)
+    zp = jnp.clip(jnp.round(-lo / scale), 0, 255).astype(jnp.int32)
+    return QuantParams(scale=scale, zero_point=zp)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    q = jnp.round(x.astype(jnp.float32) / qp.scale) + qp.zero_point
+    return jnp.clip(q, 0, 255).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
+    return (q - qp.zero_point).astype(jnp.float32) * qp.scale
+
+
+def fake_quant(x: jax.Array, qp: Optional[QuantParams] = None) -> jax.Array:
+    """Quantize-dequantize round trip (for QAT-style experiments)."""
+    qp = qp or calibrate(x)
+    return dequantize(quantize(x, qp), qp)

@@ -1,0 +1,93 @@
+"""Resilience analysis driver (paper Sec. IV, Fig. 4 and Table II).
+
+Given an evaluation closure ``eval_fn(policy) -> accuracy`` and the
+model's per-layer multiplication counts, sweeps approximate multipliers
+  * one layer at a time (Fig. 4 — layer sensitivity), and
+  * across all layers at once (Table II — accuracy vs. power trade-off),
+reporting classification accuracy together with the network-level
+relative multiplier power.  The non-swept layers use the exact int8
+datapath, the paper's golden reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .backend import MatmulBackend
+from .layers import ApproxPolicy
+from .power import LayerPower, network_relative_power
+
+
+@dataclass
+class ResilienceRow:
+    multiplier: str
+    layer: str                 # layer name or "all"
+    accuracy: float
+    network_rel_power: float   # count-weighted multiplier power
+    multiplier_rel_power: float
+    mult_share: float          # fraction of network mults in this layer
+    errors: dict = field(default_factory=dict)
+
+
+def _backends_for(multiplier_names, library, mode: str, rank=None
+                  ) -> dict[str, MatmulBackend]:
+    out = {}
+    for name in multiplier_names:
+        out[name] = MatmulBackend.from_library(
+            name, mode=mode, rank=rank, library=library)
+    return out
+
+
+def per_layer_sweep(
+    eval_fn: Callable[[ApproxPolicy], float],
+    layer_counts: dict[str, int],
+    multiplier_names: list[str],
+    library,
+    mode: str = "lut",
+    base: Optional[MatmulBackend] = None,
+) -> list[ResilienceRow]:
+    """Fig. 4: one layer approximated at a time."""
+    base = base or MatmulBackend(mode="int8")
+    backends = _backends_for(multiplier_names, library, mode)
+    total = sum(layer_counts.values())
+    rows = []
+    for layer, count in layer_counts.items():
+        for mname, be in backends.items():
+            policy = ApproxPolicy(default=base, overrides=[(layer, be)])
+            acc = float(eval_fn(policy))
+            entry = library.entries[mname]
+            pw = [LayerPower(l, c, mname if l == layer else "exact",
+                             entry.rel_power if l == layer else 1.0)
+                  for l, c in layer_counts.items()]
+            rows.append(ResilienceRow(
+                multiplier=mname, layer=layer, accuracy=acc,
+                network_rel_power=network_relative_power(pw),
+                multiplier_rel_power=entry.rel_power,
+                mult_share=count / total,
+                errors=entry.errors.as_dict(),
+            ))
+    return rows
+
+
+def all_layers_sweep(
+    eval_fn: Callable[[ApproxPolicy], float],
+    layer_counts: dict[str, int],
+    multiplier_names: list[str],
+    library,
+    mode: str = "lut",
+) -> list[ResilienceRow]:
+    """Table II: the same multiplier in every (conv) layer."""
+    backends = _backends_for(multiplier_names, library, mode)
+    rows = []
+    for mname, be in backends.items():
+        policy = ApproxPolicy(default=be)
+        acc = float(eval_fn(policy))
+        entry = library.entries[mname]
+        rows.append(ResilienceRow(
+            multiplier=mname, layer="all", accuracy=acc,
+            network_rel_power=entry.rel_power,
+            multiplier_rel_power=entry.rel_power,
+            mult_share=1.0,
+            errors=entry.errors.as_dict(),
+        ))
+    return rows

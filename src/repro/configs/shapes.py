@@ -1,0 +1,83 @@
+"""The four assigned input shapes (seq_len x global_batch) and the
+ShapeDtypeStruct builders for every (arch x shape) dry-run cell.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a
+KV cache of seq_len); ``prefill_32k`` lowers the prefill serve step;
+``train_4k`` lowers ``train_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LMConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM/hybrid
+# (see DESIGN.md §5 — the 8 pure full-attention archs skip it).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: LMConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: LMConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the data batch of this (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            s_img = cfg.n_img_tokens
+            return {
+                "tokens": _sds((b, s - s_img), jnp.int32),
+                "targets": _sds((b, s - s_img), jnp.int32),
+                "img_embeds": _sds((b, s_img, cfg.d_model), jnp.float32),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((b, cfg.enc_frames, cfg.d_model),
+                               jnp.float32),
+                "tokens": _sds((b, s), jnp.int32),
+                "targets": _sds((b, s), jnp.int32),
+            }
+        return {"tokens": _sds((b, s), jnp.int32),
+                "targets": _sds((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            s_img = cfg.n_img_tokens
+            return {
+                "tokens": _sds((b, s - s_img), jnp.int32),
+                "img_embeds": _sds((b, s_img, cfg.d_model), jnp.float32),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((b, cfg.enc_frames, cfg.d_model),
+                               jnp.float32),
+                "tokens": _sds((b, s), jnp.int32),
+            }
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one token against a cache of seq_len
+    return {"token": _sds((b,), jnp.int32)}

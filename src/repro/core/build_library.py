@@ -1,0 +1,31 @@
+"""CLI: build and persist the default approximate-circuit library.
+
+    PYTHONPATH=src python -m repro.core.build_library --budget small
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .library import DEFAULT_LIBRARY_PATH, build_default_library
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", choices=("tiny", "small", "full"),
+                    default="small")
+    ap.add_argument("--out", default=DEFAULT_LIBRARY_PATH)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    lib = build_default_library(args.budget, progress=True)
+    lib.save(args.out)
+    print(f"built {len(lib.entries)} circuits in {time.time() - t0:.1f}s "
+          f"-> {args.out}")
+    for row in lib.counts_table():
+        print(f"  {row['circuit']:<12} {row['bit_width']:>4}b : "
+              f"{row['n_implementations']}")
+
+
+if __name__ == "__main__":
+    main()

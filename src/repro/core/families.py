@@ -1,0 +1,130 @@
+"""Analytic (manually-designed) approximate circuit families.
+
+These are the classic ad-hoc designs the paper benchmarks its evolved
+circuits against (Sec. IV, Table II):
+
+  * truncated multipliers  — drop the k LSBs of both operands
+  * BAM multipliers        — broken-array multiplier [Mahdiani et al.],
+                             horizontal break h (drop first h partial-
+                             product rows) + vertical break v (drop all
+                             partial products of weight < v)
+  * LOA adders             — lower-part OR adder: low k bits are OR'd,
+                             upper part is an exact adder seeded with
+                             the AND of the top low-part bits
+  * truncated adders       — drop the k LSBs entirely
+
+All are generated as gate-level netlists so they flow through the same
+cost/error pipeline as the evolved circuits.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from . import gates
+from .netlist import Netlist
+from .seeds import _Builder
+
+
+def masked_array_multiplier(
+    width: int, keep: Callable[[int, int], bool], name: str
+) -> Netlist:
+    """Array multiplier generating only the partial products for which
+    ``keep(i, j)`` is true (row i = bit i of operand B, column j = bit j
+    of operand A; weight = i + j). Dropped products contribute 0."""
+    w = width
+    b = _Builder(2 * w)
+
+    def pp(i: int, j: int):
+        if keep(i, j):
+            return b.gate(gates.AND, b.inp(j), b.inp(w + i))
+        return None
+
+    zero = None
+
+    def z():
+        nonlocal zero
+        if zero is None:
+            zero = b.const0()
+        return zero
+
+    rows = [[pp(i, j) for j in range(w)] for i in range(w)]
+    outs: list = [rows[0][0] if rows[0][0] is not None else z()]
+    row = rows[0][1:]
+    for i in range(1, w):
+        nxt: list = []
+        carry = None
+        for j in range(w):
+            acc = row[j] if j < len(row) else None
+            p = rows[i][j]
+            terms = [t for t in (p, acc, carry) if t is not None]
+            if len(terms) == 0:
+                s, c = None, None
+            elif len(terms) == 1:
+                s, c = terms[0], None
+            elif len(terms) == 2:
+                s, c = b.half_adder(terms[0], terms[1])
+            else:
+                s, c = b.full_adder(terms[0], terms[1], terms[2])
+            if j == 0:
+                outs.append(s if s is not None else z())
+            else:
+                nxt.append(s)
+            carry = c
+        nxt.append(carry)  # may be None; padded below
+        row = nxt
+    for s in row:
+        outs.append(s if s is not None else z())
+    outs = [o for o in outs]
+    while len(outs) < 2 * w:
+        outs.append(z())
+    nl = b.finish(outs[: 2 * w], 2 * w, name)
+    return nl.compact()
+
+
+def truncated_multiplier(width: int, k: int) -> Netlist:
+    """Truncate k LSBs of both operands (paper's 'Truncated (width-k)-bit')."""
+    return masked_array_multiplier(
+        width, lambda i, j: i >= k and j >= k, f"mul{width}u_trunc{width - k}"
+    )
+
+
+def bam_multiplier(width: int, h: int, v: int) -> Netlist:
+    """Broken-array multiplier with horizontal break h, vertical break v."""
+    return masked_array_multiplier(
+        width, lambda i, j: i >= h and (i + j) >= v, f"mul{width}u_bam_h{h}_v{v}"
+    )
+
+
+def loa_adder(width: int, k: int) -> Netlist:
+    """Lower-part OR adder: s_i = a_i | b_i for i < k; carry into the
+    upper exact ripple part is a_{k-1} & b_{k-1}."""
+    if not 0 < k < width:
+        raise ValueError("0 < k < width required")
+    b = _Builder(2 * width)
+    outs: list[int] = []
+    for i in range(k):
+        outs.append(b.gate(gates.OR, b.inp(i), b.inp(width + i)))
+    carry = b.gate(gates.AND, b.inp(k - 1), b.inp(width + k - 1))
+    for i in range(k, width):
+        s, carry = b.full_adder(b.inp(i), b.inp(width + i), carry)
+        outs.append(s)
+    outs.append(carry)
+    return b.finish(outs, width + 1, f"add{width}u_loa{k}")
+
+
+def truncated_adder(width: int, k: int) -> Netlist:
+    """Drop the k LSBs entirely (outputs 0), exact ripple above."""
+    if not 0 < k < width:
+        raise ValueError("0 < k < width required")
+    b = _Builder(2 * width)
+    zero = b.const0()
+    outs: list[int] = [zero] * k
+    s, carry = b.half_adder(b.inp(k), b.inp(width + k))
+    outs.append(s)
+    for i in range(k + 1, width):
+        s, carry = b.full_adder(b.inp(i), b.inp(width + i), carry)
+        outs.append(s)
+    outs.append(carry)
+    return b.finish(outs, width + 1, f"add{width}u_trunc{k}")

@@ -1,0 +1,96 @@
+"""LUT construction and low-rank decomposition of approximate multipliers.
+
+The TFApprox-style emulation of an 8-bit approximate multiplier is a
+256x256 int32 lookup table.  On TPU we additionally support a *low-rank
+decomposition* of that table (DESIGN.md §4.2):
+
+    L[a, b] ≈ sum_r U[r, a] * V[r, b]        (rank-R, via SVD)
+
+which converts the emulated matmul into R per-element 256-entry table
+lookups followed by R MXU matmuls.  An exact multiplier is exactly rank
+1 (L = a bᵀ); truncation is rank 1; BAM is near-rank-2; evolved circuits
+are numerically near-low-rank because their error surfaces are highly
+structured.  ``rank_profile`` quantifies, per circuit, the decomposition
+MAE as a function of R so callers can pick R such that emulation error
+is negligible next to the circuit's own error.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .netlist import Netlist
+
+
+def exact_mul_lut(width: int = 8) -> np.ndarray:
+    n = 1 << width
+    a = np.arange(n, dtype=np.int64)
+    return (a[:, None] * a[None, :]).astype(np.int32)
+
+
+def lut_from_netlist(nl: Netlist, width: int = 8) -> np.ndarray:
+    """Exhaustive (2^w x 2^w) LUT for a 2w-input multiplier-like netlist.
+    Row index = operand A (low input bits), column = operand B."""
+    if nl.n_i != 2 * width:
+        raise ValueError("netlist is not a two-operand circuit of this width")
+    n = 1 << width
+    a = np.arange(n, dtype=np.uint64)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    vals = nl.eval_ints(A.reshape(-1), B.reshape(-1), widths=[width, width])
+    return vals.reshape(n, n).astype(np.int64).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class LowRankFactors:
+    """L ≈ U^T V with U: (R, n) and V: (R, n), float32."""
+    u: np.ndarray  # (R, n)
+    v: np.ndarray  # (R, n)
+
+    @property
+    def rank(self) -> int:
+        return int(self.u.shape[0])
+
+    def reconstruct(self) -> np.ndarray:
+        return (self.u.T @ self.v).astype(np.float64)
+
+    def mae_vs(self, lut: np.ndarray) -> float:
+        return float(np.abs(self.reconstruct() - lut.astype(np.float64)).mean())
+
+
+def decompose_lut(lut: np.ndarray, rank: int) -> LowRankFactors:
+    """Best rank-R factorization (Eckart-Young, SVD) of the LUT."""
+    L = lut.astype(np.float64)
+    w, s, vt = np.linalg.svd(L, full_matrices=False)
+    r = int(min(rank, s.shape[0]))
+    scale = np.sqrt(s[:r])
+    u = (w[:, :r] * scale[None, :]).T.astype(np.float32)
+    v = (vt[:r, :] * scale[:, None]).astype(np.float32)
+    return LowRankFactors(u=u, v=v)
+
+
+def rank_profile(lut: np.ndarray, max_rank: int = 16) -> list[dict]:
+    """Decomposition MAE for R = 1..max_rank (one SVD, truncated views)."""
+    L = lut.astype(np.float64)
+    w, s, vt = np.linalg.svd(L, full_matrices=False)
+    out = []
+    recon = np.zeros_like(L)
+    for r in range(1, min(max_rank, s.shape[0]) + 1):
+        recon += np.outer(w[:, r - 1] * s[r - 1], vt[r - 1, :])
+        err = np.abs(recon - L)
+        out.append({
+            "rank": r,
+            "mae": float(err.mean()),
+            "wce": float(err.max()),
+            "sigma": float(s[r - 1]),
+        })
+    return out
+
+
+def rank_for_tolerance(lut: np.ndarray, mae_tol: float, max_rank: int = 64) -> int:
+    """Smallest R whose decomposition MAE <= mae_tol (capped at max_rank)."""
+    prof = rank_profile(lut, max_rank=max_rank)
+    for row in prof:
+        if row["mae"] <= mae_tol:
+            return int(row["rank"])
+    return int(max_rank)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: bit-true LUT-gather approximate matmul.
+
+TPU-native port of TFApprox's GPU texture-LUT emulation (DESIGN.md
+§4.1): the full 256x256 int32 product LUT (256 KiB) is pinned in VMEM
+for every grid step; operand tiles stream HBM -> VMEM per BlockSpec;
+products are vector gathers on the VPU with exact int32 accumulation —
+bit-identical to the gate-level netlist, which is what a resilience
+analysis must guarantee.
+
+The gather materializes (bm, kc, bn) product cubes, so the k-dimension
+is processed in ``K_CHUNK`` slices to bound VMEM:
+  VMEM ≈ lut(256K) + a(bm*bk*4) + w(bk*bn*4) + cube(bm*K_CHUNK*bn*4)
+       ≈ 0.25 + 0.0625 + 0.0625 + 0.5 MiB  for 128/128/128 tiles.
+
+This kernel intentionally does *not* use the MXU — it exists as the
+paper-faithful baseline the low-rank kernel is hill-climbed against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+K_CHUNK = 8
+
+
+def _kernel(a_ref, w_ref, lut_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]          # (BM, BK) int32 codes
+    w = w_ref[...]          # (BK, BN) int32 codes
+    lut = lut_ref[...]      # (65536,) int32
+
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice(a, (0, c * K_CHUNK), (a.shape[0], K_CHUNK))
+        w_c = jax.lax.dynamic_slice(w, (c * K_CHUNK, 0), (K_CHUNK, w.shape[1]))
+        idx = a_c[:, :, None] * 256 + w_c[None, :, :]      # (BM,KC,BN)
+        prods = jnp.take(lut, idx, axis=0)                  # VPU gather
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+    nk = a.shape[1] // K_CHUNK
+    acc = jax.lax.fori_loop(
+        0, nk, body, jnp.zeros((a.shape[0], w.shape[1]), jnp.int32))
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def approx_matmul_lut_pallas(qa: jax.Array, qw: jax.Array, lut: jax.Array,
+                             interpret: bool = False) -> jax.Array:
+    """qa: (M,K) int32 in [0,255]; qw: (K,N) int32; lut: (256,256) int32.
+    Returns (M,N) int32 = Σ_k LUT[qa, qw].  M,N,K padded to tiles; the
+    K-padding contribution (pad rows hit LUT[0,0]) is subtracted exactly.
+    """
+    m, k = qa.shape
+    k2, n = qw.shape
+    assert k == k2
+    pm, pn, pk = (-m) % BM, (-n) % BN, (-k) % BK
+    qa_p = jnp.pad(qa, ((0, pm), (0, pk)))
+    qw_p = jnp.pad(qw, ((0, pk), (0, pn)))
+    flat = lut.reshape(-1)
+    grid = (qa_p.shape[0] // BM, qw_p.shape[1] // BN, qa_p.shape[1] // BK)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, s: (i, s)),
+            pl.BlockSpec((BK, BN), lambda i, j, s: (s, j)),
+            pl.BlockSpec((65536,), lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qa_p.shape[0], qw_p.shape[1]),
+                                       jnp.int32),
+        interpret=interpret,
+    )(qa_p, qw_p, flat)
+    out = out[:m, :n]
+    if pk:
+        out = out - jnp.int32(pk) * flat[0]  # remove pad-row LUT[0,0] terms
+    return out

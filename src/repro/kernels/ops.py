@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs verbatim, which is how they are validated against
+the ``ref.py`` oracles.  On a TPU backend the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .approx_matmul import approx_matmul_lut_pallas
+from .lowrank_matmul import lowrank_matmul_pallas
+from .bitsim import bitsim_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def approx_matmul_lut(qa: jax.Array, qw: jax.Array, lut: jax.Array
+                      ) -> jax.Array:
+    """Bit-true approximate matmul on uint8 codes. (M,K)x(K,N)->(M,N) i32."""
+    return approx_matmul_lut_pallas(qa, qw, lut, interpret=_interpret())
+
+
+def lowrank_matmul(qa: jax.Array, qw: jax.Array, u: jax.Array, v: jax.Array
+                   ) -> jax.Array:
+    """Rank-R factored approximate matmul. (M,K)x(K,N)->(M,N) f32."""
+    return lowrank_matmul_pallas(qa, qw, u, v, interpret=_interpret())
+
+
+def bitsim(netlist, planes64: np.ndarray) -> np.ndarray:
+    """Evaluate a ``repro.core.netlist.Netlist`` on uint64 bit-planes via
+    the Pallas simulator (planes are split to uint32 lanes and rejoined).
+    Drop-in equivalent of ``netlist.eval_words``."""
+    n_i, w64 = planes64.shape
+    lo = (planes64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (planes64 >> np.uint64(32)).astype(np.uint32)
+    planes32 = np.empty((n_i, 2 * w64), dtype=np.uint32)
+    planes32[:, 0::2] = lo
+    planes32[:, 1::2] = hi
+    out32 = np.asarray(bitsim_pallas(
+        jnp.asarray(netlist.funcs), jnp.asarray(netlist.in0),
+        jnp.asarray(netlist.in1), jnp.asarray(netlist.outputs),
+        jnp.asarray(planes32),
+        n_nodes=netlist.n_nodes, n_i=netlist.n_i, n_o=netlist.n_o,
+        interpret=_interpret(),
+    ))
+    out64 = (out32[:, 0::2].astype(np.uint64)
+             | (out32[:, 1::2].astype(np.uint64) << np.uint64(32)))
+    return out64

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the bit-true references the property tests compare against
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts exact
+equality for integer paths / allclose for float paths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def approx_matmul_lut_ref(qa: jax.Array, qw: jax.Array, lut: jax.Array
+                          ) -> jax.Array:
+    """Σ_k LUT[qa[m,k], qw[k,n]] with int32 accumulation.
+    qa: (M,K) int32 codes in [0,255]; qw: (K,N); lut: (256,256) int32."""
+    flat = lut.reshape(-1)
+    idx = qa[:, :, None] * 256 + qw[None, :, :]
+    return jnp.sum(jnp.take(flat, idx, axis=0), axis=1, dtype=jnp.int32)
+
+
+def lowrank_matmul_ref(qa: jax.Array, qw: jax.Array, u: jax.Array,
+                       v: jax.Array) -> jax.Array:
+    """Σ_r tableU_r(qa) @ tableV_r(qw), f32. u,v: (R,256) f32."""
+    ua = jnp.take(u, qa, axis=1)   # (R,M,K)
+    vw = jnp.take(v, qw, axis=1)   # (R,K,N)
+    return jnp.einsum("rmk,rkn->mn", ua, vw,
+                      preferred_element_type=jnp.float32)
+
+
+def bitsim_ref(funcs: np.ndarray, in0: np.ndarray, in1: np.ndarray,
+               out_idx: np.ndarray, planes: jax.Array) -> jax.Array:
+    """Bit-parallel netlist evaluation on uint32 word planes.
+
+    planes: (n_i, W) uint32. Returns (n_o, W) uint32.  Gate semantics
+    match repro.core.gates (identity, not, and, or, xor, nand, nor,
+    xnor, const0, const1).
+    """
+    n_i, W = planes.shape
+    sigs = [planes[i] for i in range(n_i)]
+    ones = jnp.full((W,), 0xFFFFFFFF, dtype=jnp.uint32)
+    zeros = jnp.zeros((W,), dtype=jnp.uint32)
+    for f, a, b in zip(funcs.tolist(), in0.tolist(), in1.tolist()):
+        x, y = sigs[a], sigs[b]
+        if f == 0:
+            r = x
+        elif f == 1:
+            r = ~x
+        elif f == 2:
+            r = x & y
+        elif f == 3:
+            r = x | y
+        elif f == 4:
+            r = x ^ y
+        elif f == 5:
+            r = ~(x & y)
+        elif f == 6:
+            r = ~(x | y)
+        elif f == 7:
+            r = ~(x ^ y)
+        elif f == 8:
+            r = zeros
+        elif f == 9:
+            r = ones
+        else:
+            raise ValueError(f)
+        sigs.append(r)
+    return jnp.stack([sigs[int(o)] for o in out_idx])

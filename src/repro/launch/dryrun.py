@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) cell on the production meshes and record
+memory / cost / collective analysis for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k [--multi-pod] [--out benchmarks/results/dryrun]
+
+The XLA_FLAGS line above MUST precede any jax import: it materializes
+512 host placeholder devices so ``jax.make_mesh`` can build the
+(2,16,16) production mesh.  Smoke tests / benches never import this
+module and keep seeing 1 device.
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, all_cells, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (batch_shardings, cache_shardings, data_axes,
+                               axis_size, make_production_mesh,
+                               params_shardings, replicated)
+from repro.launch.steps import build_cell, build_probes, model_flops
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+
+def _sharded_sds(sds_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings_tree)
+
+
+def cell_shardings(cell, mesh):
+    """in/out sharding pytrees for this cell's step function."""
+    long_ctx = cell.shape.name == "long_500k"
+    if cell.kind == "train":
+        params_sds, opt_sds, bspecs = cell.args_sds
+        p_sh = params_shardings(params_sds, mesh)
+        from repro.train.optimizer import OptState
+        opt_sh = OptState(step=replicated(mesh),
+                          m=jax.tree.map(lambda x: x, p_sh),
+                          v=jax.tree.map(lambda x: x, p_sh))
+        b_sh = batch_shardings(bspecs, mesh, microbatched=True)
+        in_sh = (p_sh, opt_sh, b_sh)
+        out_sh = (p_sh, opt_sh, replicated(mesh))
+        return in_sh, out_sh
+    if cell.kind == "prefill":
+        params_sds, bspecs, cache_sds = cell.args_sds
+        p_sh = params_shardings(params_sds, mesh)
+        b_sh = batch_shardings(bspecs, mesh)
+        c_sh = cache_shardings(cache_sds, mesh, long_ctx)
+        dp = data_axes(mesh)
+        logits_sh = NamedSharding(mesh, P(dp, None))
+        return (p_sh, b_sh, c_sh), (logits_sh, c_sh)
+    # decode
+    params_sds, token_sds, cache_sds = cell.args_sds
+    p_sh = params_shardings(params_sds, mesh)
+    c_sh = cache_shardings(cache_sds, mesh, long_ctx)
+    dp = data_axes(mesh)
+    tok_sh = NamedSharding(
+        mesh, P(dp) if cell.shape.global_batch % axis_size(mesh, dp) == 0
+        else P())
+    logits_sh = NamedSharding(
+        mesh, P(dp, None) if cell.shape.global_batch
+        % axis_size(mesh, dp) == 0 else P())
+    return (p_sh, tok_sh, c_sh), (logits_sh, c_sh)
+
+
+def probe_shardings(probe, mesh):
+    """in-shardings for an analysis probe (out left to XLA)."""
+    cell = probe.cell
+    if probe.name == "opt":
+        params_sds, grads_sds, opt_sds = probe.args_sds
+        p_sh = params_shardings(params_sds, mesh)
+        from repro.train.optimizer import OptState
+        opt_sh = OptState(step=replicated(mesh), m=p_sh,
+                          v=jax.tree.map(lambda x: x, p_sh))
+        return (p_sh, jax.tree.map(lambda x: x, p_sh), opt_sh)
+    if cell.kind == "train":
+        params_sds, mb_specs = probe.args_sds
+        return (params_shardings(params_sds, mesh),
+                batch_shardings(mb_specs, mesh))
+    # serve probe: reuse the cell sharding logic
+    in_sh, _ = cell_shardings(cell, mesh)
+    return in_sh
+
+
+def _combine_linear(m1: dict, m2: dict, g_full: float) -> dict:
+    """Depth extrapolation: probe d1 = fixed + slope, d2 = fixed +
+    2*slope; step(L) = fixed + slope*g_full (clamped at >= 0)."""
+    out = {}
+    for key in m1:
+        slope = m2[key] - m1[key]
+        fixed = m1[key] - slope
+        out[key] = max(0.0, fixed + slope * g_full)
+    return out
+
+
+def run_probes(arch, shape_name, mesh, serve_mult, serve_mode,
+               overrides=None, serve_rank: int = 4) -> dict:
+    """Compile the shallow unrolled probes; extrapolate to full depth."""
+    from repro.configs import get_config
+    from repro.models.decoder import block_pattern
+    dp = axis_size(mesh, data_axes(mesh))
+    probes = build_probes(arch, shape_name, dp, serve_mult, serve_mode,
+                          overrides, serve_rank)
+    base_cfg = get_config(arch)
+    period = (len(block_pattern(base_cfg))
+              if base_cfg.family != "encdec" else 1)
+    g_full = base_cfg.n_layers / period
+
+    raw: dict[str, dict] = {}
+    coll_raw: dict[str, dict] = {}
+    details = []
+    n_mb = 1
+    for probe in probes:
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(probe.step_fn,
+                             in_shardings=probe_shardings(probe, mesh))
+            compiled = jitted.lower(*probe.args_sds).compile()
+            cost = compiled.cost_analysis()
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        f = float(cost.get("flops", 0.0)) if cost else 0.0
+        b = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        raw[probe.name] = {"flops": f, "bytes": b,
+                           "coll": float(coll.get("total_bytes", 0))}
+        coll_raw[probe.name] = {k: v["bytes"] for k, v in coll.items()
+                                if k != "total_bytes"}
+        n_mb = max(n_mb, probe.cell.microbatches)
+        details.append({"probe": probe.name, "depth": probe.depth,
+                        "flops": f, "bytes": b,
+                        "collective_bytes": raw[probe.name]["coll"],
+                        "compile_s": round(time.time() - t0, 1)})
+
+    step = _combine_linear(raw["stack_d1"], raw["stack_d2"], g_full)
+    kinds = set(coll_raw["stack_d1"]) | set(coll_raw["stack_d2"])
+    coll_kinds = _combine_linear(
+        {k: coll_raw["stack_d1"].get(k, 0.0) for k in kinds},
+        {k: coll_raw["stack_d2"].get(k, 0.0) for k in kinds}, g_full)
+
+    if "opt" in raw:  # train: n_mb * stack + optimizer
+        flops = n_mb * step["flops"] + raw["opt"]["flops"]
+        byts = n_mb * step["bytes"] + raw["opt"]["bytes"]
+        coll_kinds = {k: n_mb * v for k, v in coll_kinds.items()}
+        for k, v in coll_raw["opt"].items():
+            coll_kinds[k] = coll_kinds.get(k, 0.0) + v
+    else:
+        flops, byts = step["flops"], step["bytes"]
+
+    coll_by_kind = {k: {"bytes": v, "count": -1}
+                    for k, v in coll_kinds.items()}
+    coll_by_kind["total_bytes"] = sum(coll_kinds.values())
+    return {"flops_per_device": flops, "bytes_per_device": byts,
+            "collectives": coll_by_kind, "probes": details,
+            "extrapolation": {"period": period, "groups": g_full,
+                              "microbatches": n_mb}}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             serve_mult: str = "auto", serve_mode: str = "lowrank",
+             save_hlo: bool = False, out_dir: str = DEFAULT_OUT,
+             probes: bool = True, overrides=None, tag_suffix: str = "",
+             serve_rank: int = 4) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = axis_size(mesh, data_axes(mesh))
+    cell = build_cell(arch, shape_name, dp, serve_mult, serve_mode,
+                      overrides, serve_rank)
+    in_sh, out_sh = cell_shardings(cell, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=in_sh,
+                         out_shardings=out_sh, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    flops_dev = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_dev = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    coll_dev = float(coll.get("total_bytes", 0))
+    probe_info = None
+    if probes:
+        # trip-count-corrected accounting from the unrolled probes
+        probe_info = run_probes(arch, shape_name, mesh, serve_mult,
+                                serve_mode, overrides, serve_rank)
+        flops_dev = probe_info["flops_per_device"]
+        bytes_dev = probe_info["bytes_per_device"]
+        coll = probe_info["collectives"]
+        coll_dev = float(coll.get("total_bytes", 0))
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cell, cell.args_sds[0])
+    flops_global = flops_dev * n_chips
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "overrides": dict(overrides) if overrides else None,
+        "tag_suffix": tag_suffix,
+        "kind": cell.kind,
+        "mesh": "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        "n_chips": n_chips,
+        "multi_pod": multi_pod,
+        "microbatches": cell.microbatches,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_gb": (getattr(mem, "temp_size_in_bytes", 0)
+                        + getattr(mem, "argument_size_in_bytes", 0))
+            / 1e9 if mem else None,
+        },
+        "flops_per_device": flops_dev,
+        "flops_global": flops_global,
+        "bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "probe_details": (probe_info or {}).get("probes"),
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck.replace("_s", ""),
+            "step_time_lower_bound_s": max(terms.values()),
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / flops_global
+                                   if flops_global else None),
+            "roofline_fraction": (
+                (mf / n_chips / PEAK_FLOPS) / max(terms.values())
+                if max(terms.values()) > 0 else None),
+        },
+    }
+    if save_hlo:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}"
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return result
+
+
+def save_result(result: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{result['arch']}_{result['shape']}_"
+           f"{'mp' if result['multi_pod'] else 'sp'}"
+           + (result.get("tag_suffix") or ""))
+    path = os.path.join(out_dir, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable cell (sequentially)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--serve-mult", default="auto")
+    ap.add_argument("--serve-mode", default="lowrank",
+                    choices=("lowrank", "lowrank_prepared", "int8",
+                             "lut", "bf16"))
+    ap.add_argument("--serve-rank", type=int, default=4)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled analysis probes")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file name")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.all:
+        cells, skips = all_cells()
+        todo = [(a, s) for a, s in cells]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    for arch, shape in todo:
+        tag = (f"{arch}_{shape}_{'mp' if args.multi_pod else 'sp'}"
+               + args.tag)
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] skip {tag} (exists)", flush=True)
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            overrides = dict(kv.split("=", 1) for kv in args.override)
+            res = run_cell(arch, shape, args.multi_pod, args.serve_mult,
+                           args.serve_mode, args.save_hlo, args.out,
+                           probes=not args.no_probes, overrides=overrides,
+                           tag_suffix=args.tag,
+                           serve_rank=args.serve_rank)
+        except Exception as e:  # record failures — they are bugs to fix
+            res = {"arch": arch, "shape": shape,
+                   "multi_pod": args.multi_pod, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        p = save_result(res, args.out)
+        if res.get("ok"):
+            r = res["roofline"]
+            print(f"[dryrun] {tag}: OK compile={res['compile_s']}s "
+                  f"bottleneck={r['bottleneck']} "
+                  f"lb={r['step_time_lower_bound_s']:.4f}s "
+                  f"roofline_frac={r['roofline_fraction']:.3f}"
+                  if r["roofline_fraction"] is not None else "", flush=True)
+        else:
+            print(f"[dryrun] {tag}: FAIL {res['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

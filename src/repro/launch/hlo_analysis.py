@@ -1,0 +1,149 @@
+"""HLO-text analysis: collective byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the compiled
+module text: build a name -> shape map from every instruction
+definition, then for each collective op sum its *operand* bytes (the
+data each chip contributes).  The HLO is SPMD — per-chip bytes; the
+roofline divides by per-chip link bandwidth (see EXPERIMENTS.md
+§Roofline for the accounting convention).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+    "f8e5m2": 1, "token": 0, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+class _Def:
+    __slots__ = ("name", "shape", "op", "args")
+
+    def __init__(self, name, shape, op, args):
+        self.name, self.shape, self.op, self.args = name, shape, op, args
+
+
+def _parse_def(line: str):
+    """Parse '  %name = SHAPE opname(args...' robustly.
+
+    SHAPE is either 'dtype[dims]{layout}' or a tuple '( ... )' (which may
+    itself contain parens-free shapes and /*comments*/) — a greedy regex
+    here would eat into the op name, so we scan explicitly."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not (s.startswith("%") or s[:eq].replace(".", "").replace(
+            "-", "").replace("_", "").isalnum()):
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape = rhs[:end + 1]
+        rest = rhs[end + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par <= 0:
+        return None
+    op = rest[:par]
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return _Def(name, shape, op, rest[par + 1:])
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'bf16[16,128]{1,0}' or a tuple
+    '(f32[2,4], s32[1])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: {"bytes": per-chip operand bytes, "count": n},
+    "total_bytes": ...} summed over the module."""
+    lines = hlo_text.splitlines()
+    defs = [d for d in (_parse_def(ln) for ln in lines) if d is not None]
+    shapes = {d.name: d.shape for d in defs}
+
+    out: dict = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for d in defs:
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if d.op == c or d.op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        operand_bytes = 0
+        for ref in re.finditer(r"%?([\w\.\-]+)", d.args.split(")")[0]):
+            name = ref.group(1)
+            if name in shapes:
+                operand_bytes += shape_bytes(shapes[name])
+        if operand_bytes == 0:
+            operand_bytes = shape_bytes(d.shape)
+        out[kind]["bytes"] += operand_bytes
+        out[kind]["count"] += 1
+    total = sum(v["bytes"] for v in out.values())
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = total
+    return result
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> list[tuple[str, int]]:
+    """Instruction-count histogram — used to spot remat recompute and
+    layout thrash (reshape/transpose storms) during §Perf iterations."""
+    counts: dict[str, int] = defaultdict(int)
+    for ln in hlo_text.splitlines():
+        d = _parse_def(ln)
+        if d is not None:
+            counts[d.op] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+
+
+def bytes_by_op(hlo_text: str, top: int = 15) -> list[tuple[str, float, int]]:
+    """Result-shape bytes aggregated per op kind (profiling aid)."""
+    agg: dict[str, list] = defaultdict(lambda: [0, 0])
+    for ln in hlo_text.splitlines():
+        d = _parse_def(ln)
+        if d is None:
+            continue
+        agg[d.op][0] += shape_bytes(d.shape)
+        agg[d.op][1] += 1
+    rows = [(op, b, n) for op, (b, n) in agg.items()]
+    return sorted(rows, key=lambda r: -r[1])[:top]

@@ -1,0 +1,221 @@
+"""Production mesh + sharding rules (DESIGN.md §6).
+
+Mesh: single-pod (data=16, model=16) = 256 chips; multi-pod adds an
+outer ``pod`` axis (2, 16, 16) = 512 chips.  ``pod`` behaves as an outer
+data-parallel axis whose gradient reduction crosses the DCN.
+
+Parameter sharding is FSDP-style: every weight matrix puts one dim on
+``model`` (tensor parallelism / expert parallelism) and one on the
+data(-and-pod) axes (ZeRO-3 parameter sharding) — XLA inserts the
+just-in-time all-gathers.  Axes are applied only when the dim is
+divisible; GQA head counts that don't divide 16 (yi/llava 56H,
+qwen3-14b 40H, whisper 20H) simply drop to replicated on that dim
+rather than relying on GSPMD padding.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh):
+    """The data-parallel axes ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+# ----------------------------------------------------------------------
+# Parameter sharding rules
+# ----------------------------------------------------------------------
+# matched against the LAST path component; (model_dim, fsdp_dim) are
+# indices into the *trailing* (non-stacked) dims of the leaf.
+#   in-proj style (d_in, d_out): model on the output dim, fsdp on input
+#   out-proj style (d_in, d_out): model on the input dim, fsdp on output
+_OUT_PROJ_NAMES = ("wo", "out_proj", "w_down", "wdown")
+_EXPERT_PREFIX = ("wi", "wg", "wo")  # under a "ffn_*/..." moe subtree
+
+
+def param_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    fsdp = data_axes(mesh)
+    nd = len(shape)
+    parts = path.split("/")
+    last = parts[-1]
+    stacked = 1 if parts and parts[0].endswith("blocks") else 0
+    tshape = shape[stacked:]
+    tnd = len(tshape)
+
+    def assemble(tspec: list) -> P:
+        return P(*([None] * stacked + tspec))
+
+    # prepared-weight leaves (lowrank serving): tabs are (..., R, K, N)
+    # and shard like the original weight; aux scalars replicate.
+    if last == "tabs":
+        parent = parts[-2] if len(parts) >= 2 else ""
+        model_dim, fsdp_dim = ((-2, -1) if parent in _OUT_PROJ_NAMES
+                               else (-1, -2))
+        spec = [None] * tnd
+        if _fits(tshape[model_dim], axis_size(mesh, "model")):
+            spec[model_dim] = "model"
+        elif tnd >= 4 and _fits(tshape[0], axis_size(mesh, "model")):
+            spec[0] = "model"          # experts: EP on E
+        if spec[fsdp_dim] is None and _fits(tshape[fsdp_dim],
+                                            axis_size(mesh, fsdp)):
+            spec[fsdp_dim] = fsdp
+        return assemble(spec)
+    if last in ("colsum", "w_scale", "w_zp"):
+        spec = [None] * tnd
+        if tnd >= 1 and last == "colsum":
+            parent = parts[-2] if len(parts) >= 2 else ""
+            if parent not in _OUT_PROJ_NAMES and \
+                    _fits(tshape[-1], axis_size(mesh, "model")):
+                spec[-1] = "model"
+        return assemble(spec)
+
+    if tnd <= 1:
+        return assemble([None] * tnd)
+
+    is_moe_leaf = ("moe" in path or "ffn_" in path) and tnd == 3
+    if is_moe_leaf:
+        # experts (E, d, f): EP on E, fsdp on the widest remaining dim
+        spec: list = [None, None, None]
+        if _fits(tshape[0], axis_size(mesh, "model")):
+            spec[0] = "model"
+        wide = 1 + int(tshape[2] >= tshape[1])
+        if _fits(tshape[wide], axis_size(mesh, fsdp)):
+            spec[wide] = fsdp
+        return assemble(spec)
+
+    if last in ("embed", "unembed"):
+        v, d = tshape
+        spec = [None, None]
+        if _fits(v, axis_size(mesh, "model")):
+            spec[0] = "model"
+            if _fits(d, axis_size(mesh, fsdp)):
+                spec[1] = fsdp
+        elif _fits(d, axis_size(mesh, "model")):
+            spec[1] = "model"
+        return assemble(spec)
+
+    if last == "w" and tnd == 4:  # conv kernels (kh,kw,cin,cout): replicate
+        return assemble([None] * 4)
+
+    if tnd == 2:
+        d_in, d_out = tshape
+        model_dim = 0 if last in _OUT_PROJ_NAMES else 1
+        fsdp_dim = 1 - model_dim
+        spec = [None, None]
+        if _fits(tshape[model_dim], axis_size(mesh, "model")):
+            spec[model_dim] = "model"
+        if _fits(tshape[fsdp_dim], axis_size(mesh, fsdp)):
+            spec[fsdp_dim] = fsdp
+        return assemble(spec)
+
+    return assemble([None] * tnd)
+
+
+def _tree_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def params_shardings(params_shapes, mesh: Mesh):
+    """pytree of ShapeDtypeStruct -> pytree of NamedSharding."""
+    paths, leaves, treedef = _tree_with_paths(params_shapes)
+    out = [NamedSharding(mesh, param_pspec(p, l.shape, mesh))
+           for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+# Activation / batch / cache sharding rules
+# ----------------------------------------------------------------------
+def batch_pspec(name: str, shape: tuple, mesh: Mesh,
+                microbatched: bool = False) -> P:
+    dp = data_axes(mesh)
+    lead = [None] if microbatched else []
+    body = list(shape[1:] if microbatched else shape)
+    spec: list = [None] * len(body)
+    if body and _fits(body[0], axis_size(mesh, dp)):
+        spec[0] = dp
+    return P(*(lead + spec))
+
+
+def cache_pspec(path: str, shape: tuple, mesh: Mesh, long_context: bool
+                ) -> P:
+    """KV/state cache sharding.  Dense KV (G,B,T,H,D): batch on data,
+    sequence on model (long_500k: sequence on (data,model) since B=1).
+    MLA ckv (G,B,T,C): batch on data.  Mamba state (G,B,H,P,N): batch on
+    data, heads on model.  Conv state (G,B,W,C): batch data, C model."""
+    dp = data_axes(mesh)
+    last = path.split("/")[-1]
+    nd = len(shape)
+    spec: list = [None] * nd
+    if last == "pos" or nd <= 1:
+        return P(*spec)
+    # identify batch dim: stacked caches are (G, B, ...); whisper cross
+    # kv is (L, B, F, H, D) — batch is dim 1 in both.
+    bdim = 1
+    if long_context:
+        seq_axes = tuple(dp) + ("model",)
+        if last in ("k", "v", "ckv", "kr") and nd >= 3:
+            if _fits(shape[2], axis_size(mesh, seq_axes)):
+                spec[2] = seq_axes
+                return P(*spec)
+    if _fits(shape[bdim], axis_size(mesh, dp)):
+        spec[bdim] = dp
+    if last in ("k", "v") and nd == 5:
+        if _fits(shape[3], axis_size(mesh, "model")):
+            spec[3] = "model"          # kv heads (whisper MHA: 20 -> no)
+        elif _fits(shape[2], axis_size(mesh, "model")):
+            spec[2] = "model"          # sequence on model
+    elif last == "state" and nd == 5:
+        if _fits(shape[2], axis_size(mesh, "model")):
+            spec[2] = "model"          # ssm heads
+    elif last == "conv" and nd == 4:
+        if _fits(shape[3], axis_size(mesh, "model")):
+            spec[3] = "model"          # conv channels
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, long_context: bool = False):
+    paths, leaves, treedef = _tree_with_paths(cache_shapes)
+    out = [NamedSharding(mesh,
+                         cache_pspec(p, l.shape, mesh, long_context))
+           for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, microbatched: bool = False):
+    paths, leaves, treedef = _tree_with_paths(batch_shapes)
+    out = [NamedSharding(mesh,
+                         batch_pspec(p, l.shape, mesh, microbatched))
+           for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

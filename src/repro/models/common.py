@@ -1,0 +1,495 @@
+"""Shared model substrate: config, norms, RoPE, GQA attention, FFN,
+chunked cross-entropy, parameter init.
+
+All projection matmuls route through an ``ApproxPolicy`` so any layer
+can run on the emulated approximate-multiplier datapath (the paper's
+technique as a first-class feature).  Attention score/value einsums,
+norms and routers stay exact, mirroring the paper's scope (multipliers
+inside convolution/projection MACs only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy, EXACT_POLICY
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str              # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    act: str = "silu"        # silu | relu2 | gelu
+    use_rope: bool = True    # whisper: sinusoidal absolute instead
+    attn_impl: str = "vanilla"   # vanilla | chunked (flash-style)
+    kv_chunk: int = 1024         # KV block for chunked attention
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1       # MoE FFN every k-th layer (jamba: 2)
+    moe_d_ff: int = 0        # expert hidden dim (deepseek: 1536)
+    capacity_factor: float = 1.25
+    moe_blocks: int = 0      # >1: block-local dispatch (no global sort
+                             # collectives; set to the DP shard count)
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # --- SSM (mamba2 / jamba) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    attn_period: int = 0     # hybrid: 1 attention layer per this many
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+    # --- vlm (llava) ---
+    n_img_tokens: int = 0
+    # --- training ---
+    remat: bool = True
+    loss_chunk: int = 1024
+    dtype: Any = jnp.bfloat16
+    # analysis mode: unroll internal scans so compiled.cost_analysis()
+    # counts every iteration (XLA does not scale while-loop bodies by
+    # trip count) — used by the dry-run roofline probes only.
+    scan_unroll: bool = False
+
+    @property
+    def kv_groups(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def reduced(self, **overrides) -> "LMConfig":
+        """Smoke-test-sized variant of the same family."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=min(self.d_model, 64),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=min(self.d_ff, 128) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            head_dim=min(self.head_dim, 16),
+            n_experts=min(self.n_experts, 8),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            moe_d_ff=min(self.moe_d_ff, 32) if self.moe_d_ff else 0,
+            kv_lora=min(self.kv_lora, 32),
+            q_lora=min(self.q_lora, 32),
+            rope_head_dim=min(self.rope_head_dim, 8),
+            v_head_dim=min(self.v_head_dim, 16),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=min(self.ssm_head_dim, 8),
+            ssm_chunk=min(self.ssm_chunk, 16),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_frames=min(self.enc_frames, 24),
+            n_img_tokens=min(self.n_img_tokens, 8),
+            loss_chunk=64,
+            remat=False,
+            dtype=jnp.float32,
+            # no token dropping in smoke tests: keeps prefill+decode
+            # bit-consistent with the single-pass forward
+            capacity_factor=8.0,
+        )
+        if self.attn_period:
+            small["attn_period"] = min(self.attn_period,
+                                       small["n_layers"])
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ----------------------------------------------------------------------
+# Sharding hints (ambient-mesh aware; no-ops in single-device tests)
+# ----------------------------------------------------------------------
+def _ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def hint_batch(x: jax.Array, dim: int = 0) -> jax.Array:
+    """Constrain dim to the data-parallel axes (('pod','data') ∩ mesh).
+    Anchors activation sharding so GSPMD doesn't replicate the batch —
+    e.g. after vocab-sharded embedding gathers."""
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    from jax.sharding import PartitionSpec
+    axes = tuple(a for a in ("pod", "data") if a in m.axis_names)
+    if not axes:
+        return x
+    size = 1
+    for a in axes:
+        size *= m.shape[a]
+    if x.shape[dim] % size != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def hint_axis(x: jax.Array, dim: int, axis: str = "model") -> jax.Array:
+    """Constrain one dim to a named mesh axis (e.g. experts on 'model')."""
+    return hint_spec(x, {dim: axis})
+
+
+def hint_spec(x: jax.Array, dims: dict) -> jax.Array:
+    """Constrain several dims at once: {dim: 'model' | 'batch'}.
+    'batch' expands to the data-parallel axes.  Dims that don't divide
+    are dropped; no-op without an ambient mesh."""
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    from jax.sharding import PartitionSpec
+    spec = [None] * x.ndim
+    any_set = False
+    for dim, axis in dims.items():
+        if axis == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in m.axis_names)
+            if not axes:
+                continue
+            size = 1
+            for a in axes:
+                size *= m.shape[a]
+            if x.shape[dim] % size == 0:
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+                any_set = True
+        elif axis in m.axis_names and x.shape[dim] % m.shape[axis] == 0:
+            spec[dim] = axis
+            any_set = True
+    if not any_set:
+        return x
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+# ----------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------
+def dense_init(key, shape, scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * s)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ----------------------------------------------------------------------
+# Norms / activations / RoPE
+# ----------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "relu2":  # squared ReLU (nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 -> cos/sin (..., dim/2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B,S,H,D); cos/sin: (S,D/2) or (B,S,D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos_ = cos[None, :, None, :]
+        sin_ = sin[None, :, None, :]
+    else:
+        cos_ = cos[:, :, None, :]
+        sin_ = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1
+    ).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / bias, optional KV cache)
+# ----------------------------------------------------------------------
+def init_attention(key, cfg: LMConfig) -> dict:
+    k = split_keys(key, ["wq", "wk", "wv", "wo", "bq", "bk", "bv",
+                         "qnorm", "knorm"])
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(k["wq"], (d, h * hd)),
+        "wk": dense_init(k["wk"], (d, hk * hd)),
+        "wv": dense_init(k["wv"], (d, hk * hd)),
+        "wo": dense_init(k["wo"], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hk * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hk * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((hd,), jnp.float32)
+        p["knorm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _chunked_grouped_attention(q, k, v, q_pos0, t_valid, kv_chunk: int,
+                               unroll: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention over KV chunks.
+
+    q: (B,S,H,D); k/v: (B,T,Hkv,D); q_pos0: int32 scalar — absolute
+    position of q[0] (causal mask: key_pos <= q_pos0 + i); t_valid:
+    number of real keys (pad keys masked).  Never materializes the full
+    (S,T) score matrix — working set is (S, kv_chunk) per step, which is
+    what collapses the HBM roofline term for long sequences.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    g = h // hk
+    qg = (q.reshape(b, s, hk, g, d) / np.sqrt(d)).astype(q.dtype)
+
+    c = min(kv_chunk, t)
+    pad = (-t) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = k.shape[1] // c
+    k_c = jnp.moveaxis(k.reshape(b, nc, c, hk, d), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(b, nc, c, hk, d), 1, 0)
+    idx0 = jnp.arange(nc, dtype=jnp.int32) * c
+
+    q_pos = q_pos0 + jnp.arange(s, dtype=jnp.int32)          # (S,)
+    m0 = jnp.full((b, hk, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, s, d), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, i0 = inputs
+        scores = jnp.einsum("bskgd,bckd->bkgsc", qg, kc,
+                            preferred_element_type=jnp.float32)
+        key_pos = i0 + jnp.arange(c, dtype=jnp.int32)         # (C,)
+        valid = (key_pos[None, :] <= q_pos[:, None]) \
+            & (key_pos[None, :] < t_valid)                    # (S,C)
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgsc,bckd->bkgsd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_c, v_c, idx0),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # (b,hk,g,s,d)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)
+
+
+def _grouped_attention(q, k, v, mask_bias) -> jax.Array:
+    """q: (B,S,H,D) k/v: (B,T,Hkv,D); returns (B,S,H,D).
+    Grouped einsum — never materializes repeated KV heads."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q = q.reshape(b, s, hk, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(d)
+    scores = scores + mask_bias  # (.., S, T) broadcast
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, d)
+
+
+def attention(params, x, cfg: LMConfig, policy: ApproxPolicy, *,
+              positions: jax.Array, cache: Optional[dict] = None,
+              layer_tag: str = "attn") -> tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,D). cache: {"k": (B,T,Hkv,D), "v": ..., "pos": int32 scalar}
+    — decode appends at pos and attends over [0, pos].  Without cache,
+    causal self-attention over x."""
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = policy.matmul(f"{layer_tag}.wq", x, params["wq"])
+    k = policy.matmul(f"{layer_tag}.wk", x, params["wk"])
+    v = policy.matmul(f"{layer_tag}.wv", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hk, hd)
+    v = v.reshape(b, s, hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, params["knorm"], cfg.norm_eps)
+    if cfg.use_rope:
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = q.astype(cfg.dtype)
+    k = k.astype(cfg.dtype)
+    v = v.astype(cfg.dtype)
+
+    chunked = cfg.attn_impl == "chunked"
+    if cache is None:
+        # causal within x
+        if chunked:
+            out = _chunked_grouped_attention(
+                q, k, v, jnp.zeros((), jnp.int32), jnp.int32(s),
+                cfg.kv_chunk, unroll=cfg.scan_unroll)
+        else:
+            t = jnp.arange(s)
+            mask = (t[None, :] <= t[:, None])
+            bias = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+            out = _grouped_attention(q, k, v, bias)
+        new_cache = None
+    else:
+        pos = cache["pos"]  # int32 scalar: #tokens already in cache
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, pos, 0, 0))
+        if chunked:
+            out = _chunked_grouped_attention(
+                q, ck, cv, pos, pos + s, cfg.kv_chunk,
+                unroll=cfg.scan_unroll)
+        else:
+            t_len = ck.shape[1]
+            t = jnp.arange(t_len)
+            valid = t[None, :] <= (pos + jnp.arange(s)[:, None])
+            bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+            out = _grouped_attention(q, ck, cv, bias)
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+
+    out = out.reshape(b, s, h * hd)
+    out = policy.matmul(f"{layer_tag}.wo", out, params["wo"])
+    return out.astype(cfg.dtype), new_cache
+
+
+def init_attention_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# FFN
+# ----------------------------------------------------------------------
+def init_ffn(key, cfg: LMConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k = split_keys(key, ["wi", "wg", "wo"])
+    p = {"wi": dense_init(k["wi"], (cfg.d_model, d_ff)),
+         "wo": dense_init(k["wo"], (d_ff, cfg.d_model))}
+    if cfg.act == "silu":  # gated
+        p["wg"] = dense_init(k["wg"], (cfg.d_model, d_ff))
+    return p
+
+
+def ffn(params, x, cfg: LMConfig, policy: ApproxPolicy,
+        layer_tag: str = "ffn") -> jax.Array:
+    hidden = policy.matmul(f"{layer_tag}.wi", x, params["wi"])
+    if cfg.act == "silu":
+        gate = policy.matmul(f"{layer_tag}.wg", x, params["wg"])
+        hidden = jax.nn.silu(gate) * hidden
+    else:
+        hidden = activation(hidden, cfg.act)
+    return policy.matmul(f"{layer_tag}.wo", hidden.astype(cfg.dtype),
+                         params["wo"]).astype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------
+def chunked_cross_entropy(hidden: jax.Array, w_unembed: jax.Array,
+                          targets: jax.Array, chunk: int,
+                          mask: Optional[jax.Array] = None,
+                          unroll: bool = False) -> jax.Array:
+    """Mean CE over (B,S) without materializing (B,S,V) logits: the
+    sequence is processed in checkpointed chunks (memory ~ B*chunk*V)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask_full = jnp.pad(
+            mask if mask is not None else jnp.ones((b, s), jnp.float32),
+            ((0, 0), (0, pad)))
+    else:
+        mask_full = (mask if mask is not None
+                     else jnp.ones((b, s), jnp.float32))
+    n_chunks = hidden.shape[1] // chunk
+    hidden_c = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    targets_c = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mask_c = mask_full.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, t, m):
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                            w_unembed.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m), jnp.sum(m)
+
+    def body(carry, xs):
+        h, t, m = xs
+        l, n = chunk_loss(h, t, m)
+        return (carry[0] + l, carry[1] + n), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hidden_c, targets_c, mask_c), unroll=unroll)
+    return total / jnp.maximum(count, 1.0)
+
+
+def logits_from_hidden(hidden: jax.Array, w_unembed: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", hidden.astype(jnp.float32),
+                      w_unembed.astype(jnp.float32))

@@ -1,0 +1,253 @@
+"""Generic decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families via a per-period block pattern, with ``lax.scan`` over layer
+groups (O(1) HLO size for 60-layer stacks) and optional remat.
+
+Block pattern per family:
+  dense  : period 1,  [attn + ffn]
+  moe    : period 1,  [attn + moe]
+  ssm    : period 1,  [mamba]
+  hybrid : period = attn_period (jamba: 8), attention at slot
+           ``period//2``, MoE on odd slots (1:7 attn:mamba, alternating
+           MoE, per the Jamba paper)
+  vlm    : dense pattern; image patch embeddings (stub frontend) are
+           projected and prepended to the token embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy, EXACT_POLICY
+
+from .common import (LMConfig, attention, chunked_cross_entropy, dense_init,
+                     ffn, hint_batch, init_attention, init_attention_cache,
+                     init_ffn, logits_from_hidden, rms_norm, split_keys)
+from .mamba2 import init_mamba, init_mamba_cache, mamba_block
+from .mla import init_mla, init_mla_cache, mla_attention
+from .moe import init_moe, moe_ffn
+
+AUX_LOSS_COEF = 0.01
+
+
+def block_pattern(cfg: LMConfig) -> list[tuple[str, Optional[str]]]:
+    """Returns [(mixer, ffn_kind)] per period slot."""
+    if cfg.family == "ssm":
+        return [("mamba", None)]
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        out = []
+        for j in range(period):
+            mixer = "attn" if j == period // 2 else "mamba"
+            ffn_kind = "moe" if (j % 2 == 1 and cfg.n_experts > 0) else "ffn"
+            out.append((mixer, ffn_kind))
+        return out
+    if cfg.family == "moe":
+        return [("mla" if cfg.use_mla else "attn", "moe")]
+    # dense / vlm / (decoder side of others)
+    return [("mla" if cfg.use_mla else "attn", "ffn")]
+
+
+def _init_mixer(key, kind: str, cfg: LMConfig) -> dict:
+    if kind == "attn":
+        return init_attention(key, cfg)
+    if kind == "mla":
+        return init_mla(key, cfg)
+    if kind == "mamba":
+        return init_mamba(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, kind: Optional[str], cfg: LMConfig) -> Optional[dict]:
+    if kind is None:
+        return None
+    if kind == "ffn":
+        return init_ffn(key, cfg)
+    if kind == "moe":
+        return init_moe(key, cfg)
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    pattern = block_pattern(cfg)
+    period = len(pattern)
+    assert cfg.n_layers % period == 0, "n_layers must divide block period"
+    n_groups = cfg.n_layers // period
+    keys = split_keys(key, ["embed", "unembed", "img", "blocks", "norm"])
+
+    params: dict[str, Any] = {
+        "embed": dense_init(keys["embed"], (cfg.vocab, cfg.d_model),
+                            scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    params["unembed"] = dense_init(keys["unembed"], (cfg.vocab, cfg.d_model),
+                                   scale=0.02)
+    if cfg.family == "vlm":
+        params["img_proj"] = dense_init(keys["img"],
+                                        (cfg.d_model, cfg.d_model))
+
+    bkeys = jax.random.split(keys["blocks"], n_groups)
+
+    def init_group(gk):
+        sub = {}
+        sks = jax.random.split(gk, 2 * period)
+        for j, (mixer, ffn_kind) in enumerate(pattern):
+            sub[f"mixer_{j}"] = _init_mixer(sks[2 * j], mixer, cfg)
+            sub[f"norm1_{j}"] = jnp.ones((cfg.d_model,), jnp.float32)
+            f = _init_ffn(sks[2 * j + 1], ffn_kind, cfg)
+            if f is not None:
+                sub[f"ffn_{j}"] = f
+                sub[f"norm2_{j}"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return sub
+
+    params["blocks"] = jax.vmap(init_group)(bkeys)
+    return params
+
+
+def _group_body(cfg: LMConfig, policy: ApproxPolicy, pattern):
+    """Returns fn(h, positions, gparams, gcache) -> (h, aux, new_gcache)."""
+
+    def body(h, positions, gparams, gcache):
+        aux = jnp.zeros((), jnp.float32)
+        new_cache: dict[str, Any] = {}
+        for j, (mixer, ffn_kind) in enumerate(pattern):
+            hin = rms_norm(h, gparams[f"norm1_{j}"], cfg.norm_eps)
+            sub_cache = None if gcache is None else gcache.get(f"mixer_{j}")
+            if mixer == "attn":
+                y, nc = attention(gparams[f"mixer_{j}"], hin, cfg, policy,
+                                  positions=positions, cache=sub_cache,
+                                  layer_tag="attn")
+            elif mixer == "mla":
+                y, nc = mla_attention(gparams[f"mixer_{j}"], hin, cfg,
+                                      policy, positions=positions,
+                                      cache=sub_cache, layer_tag="mla")
+            else:
+                y, nc = mamba_block(gparams[f"mixer_{j}"], hin, cfg, policy,
+                                    cache=sub_cache, layer_tag="mamba")
+            if nc is not None:
+                new_cache[f"mixer_{j}"] = nc
+            h = h + y
+            if ffn_kind is not None:
+                hin = rms_norm(h, gparams[f"norm2_{j}"], cfg.norm_eps)
+                if ffn_kind == "moe":
+                    y, a = moe_ffn(gparams[f"ffn_{j}"], hin, cfg, policy)
+                    aux = aux + a
+                else:
+                    y = ffn(gparams[f"ffn_{j}"], hin, cfg, policy)
+                h = h + y
+        return h, aux, (new_cache if new_cache else None)
+
+    return body
+
+
+def _run_stack(params, h, positions, cfg: LMConfig, policy: ApproxPolicy,
+               caches=None):
+    """Scan the block groups. caches: pytree stacked on leading group dim
+    (or None).  Returns (h, aux_total, new_caches)."""
+    pattern = block_pattern(cfg)
+    body = _group_body(cfg, policy, pattern)
+
+    def scan_fn(carry, xs):
+        h, aux = carry
+        gparams, gcache = xs
+        h, a, nc = body(h, positions, gparams, gcache)
+        return (hint_batch(h), aux + a), nc
+
+    fn = jax.checkpoint(scan_fn) if cfg.remat else scan_fn
+    (h, aux), new_caches = jax.lax.scan(
+        fn, (h, jnp.zeros((), jnp.float32)),
+        (params["blocks"], caches), unroll=cfg.scan_unroll)
+    return h, aux, new_caches
+
+
+def _embed_inputs(params, batch, cfg: LMConfig, policy: ApproxPolicy):
+    """Returns (h, positions, target_mask)."""
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    mask = None
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = policy.matmul("img_proj", batch["img_embeds"].astype(cfg.dtype),
+                            params["img_proj"]).astype(cfg.dtype)
+        h = jnp.concatenate([img, h], axis=1)
+        b, s_img = img.shape[0], img.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((b, s_img), jnp.float32),
+             jnp.ones_like(tokens, jnp.float32)], axis=1)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    return hint_batch(h), positions, mask
+
+
+# ----------------------------------------------------------------------
+# Public steps
+# ----------------------------------------------------------------------
+def forward_train(params, batch, cfg: LMConfig,
+                  policy: ApproxPolicy = EXACT_POLICY) -> jax.Array:
+    """batch: tokens (B,S), targets (B,S[+img]) -> scalar loss."""
+    h, positions, mask = _embed_inputs(params, batch, cfg, policy)
+    h, aux, _ = _run_stack(params, h, positions, cfg, policy)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    targets = batch["targets"]
+    if mask is not None:  # vlm: image positions carry no LM loss
+        pad = h.shape[1] - targets.shape[1]
+        targets = jnp.pad(targets, ((0, 0), (pad, 0)))
+    loss = chunked_cross_entropy(h, params["unembed"], targets,
+                                 cfg.loss_chunk, mask,
+                                 unroll=cfg.scan_unroll)
+    return loss + AUX_LOSS_COEF * aux
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Stacked (n_groups, ...) cache pytree."""
+    pattern = block_pattern(cfg)
+    n_groups = cfg.n_layers // len(pattern)
+
+    def one_group(_):
+        c = {}
+        for j, (mixer, _f) in enumerate(pattern):
+            if mixer == "attn":
+                c[f"mixer_{j}"] = init_attention_cache(cfg, batch, max_len)
+            elif mixer == "mla":
+                c[f"mixer_{j}"] = init_mla_cache(cfg, batch, max_len)
+            else:
+                c[f"mixer_{j}"] = init_mamba_cache(cfg, batch)
+        return c
+
+    groups = [one_group(g) for g in range(n_groups)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def forward_prefill(params, batch, cache, cfg: LMConfig,
+                    policy: ApproxPolicy = EXACT_POLICY):
+    """Fill the cache from a prompt; returns (last_logits, new_cache)."""
+    h, positions, _ = _embed_inputs(params, batch, cfg, policy)
+    h, _aux, new_caches = _run_stack(params, h, positions, cfg, policy,
+                                     caches=cache)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(h[:, -1, :], params["unembed"])
+    return logits, new_caches
+
+
+def forward_decode(params, token, cache, cfg: LMConfig,
+                   policy: ApproxPolicy = EXACT_POLICY):
+    """One decode step. token: (B,) int32. Returns (logits, new_cache)."""
+    pos = _cache_pos(cache, cfg)
+    h = hint_batch(
+        jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype))
+    positions = pos + jnp.zeros((1,), jnp.int32)
+    h, _aux, new_caches = _run_stack(params, h, positions, cfg, policy,
+                                     caches=cache)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(h[:, 0, :], params["unembed"])
+    return logits, new_caches
+
+
+def _cache_pos(cache, cfg: LMConfig) -> jax.Array:
+    """Current position from any attention sub-cache (group 0)."""
+    pattern = block_pattern(cfg)
+    for j, (mixer, _f) in enumerate(pattern):
+        if mixer in ("attn", "mla"):
+            return cache[f"mixer_{j}"]["pos"][0]
+    # pure SSM: position does not matter (no RoPE); use zero
+    return jnp.zeros((), jnp.int32)

@@ -1,0 +1,194 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked quadratic-within / linear-across implementation:
+  * intra-chunk term: (C Bᵀ ⊙ L) x̄  with L the causal decay matrix,
+  * inter-chunk term: sequential ``lax.scan`` over per-chunk states
+    (S/Q steps — O(S·Q) work instead of O(S²)),
+  * O(1)-state decode step for long-context serving (the reason this
+    arch family runs the ``long_500k`` shape).
+
+Projections flow through the ApproxPolicy; the SSD einsums themselves
+stay exact (they are the data-dependent "attention" of the SSM).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy
+
+from .common import LMConfig, dense_init, rms_norm, split_keys
+
+
+def ssm_dims(cfg: LMConfig) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n            # x + B + C (single group)
+    return dict(d_inner=d_inner, n_heads=n_heads, n=n, conv_dim=conv_dim)
+
+
+def init_mamba(key, cfg: LMConfig) -> dict:
+    dd = ssm_dims(cfg)
+    d_in = cfg.d_model
+    d_proj = 2 * dd["d_inner"] + 2 * dd["n"] + dd["n_heads"]
+    k = split_keys(key, ["in_proj", "out_proj", "conv", "a", "d", "dtb",
+                         "norm"])
+    return {
+        "in_proj": dense_init(k["in_proj"], (d_in, d_proj)),
+        "out_proj": dense_init(k["out_proj"], (dd["d_inner"], d_in)),
+        "conv_w": (jax.random.normal(k["conv"],
+                                     (cfg.conv_width, dd["conv_dim"]),
+                                     jnp.float32)
+                   / np.sqrt(cfg.conv_width)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dd["n_heads"],
+                                      dtype=jnp.float32)),
+        "d_skip": jnp.ones((dd["n_heads"],), jnp.float32),
+        "dt_bias": jnp.zeros((dd["n_heads"],), jnp.float32),
+        "norm": jnp.ones((dd["d_inner"],), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. xbc: (B,S,C); w: (W,C).
+    state: (B,W-1,C) previous inputs for decode continuity.
+    Returns (y, new_state)."""
+    b, s, c = xbc.shape
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, wlen - 1, c), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)       # (B, S+W-1, C)
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(wlen):  # W is tiny (4): unrolled shifts, no conv op
+        y = y + full[:, i:i + s, :].astype(jnp.float32) * w[i]
+    new_state = full[:, -(wlen - 1):, :]
+    return jax.nn.silu(y).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int,
+                 init_state: Optional[jax.Array] = None,
+                 unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H) (post-softplus);
+    a: (H,) negative; b_mat/c_mat: (B,S,N).  Returns y: (B,S,H,P) and
+    final state (B,H,P,N)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, "seq must divide chunk"
+    nc = s // q
+
+    la = dt * a[None, None, :]                       # (B,S,H) log-decay
+    xbar = x * dt[..., None]                         # (B,S,H,P)
+
+    la_c = la.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(la_c, axis=2)                   # (B,NC,Q,H)
+    x_c = xbar.reshape(bsz, nc, q, h, p)
+    b_c = b_mat.reshape(bsz, nc, q, n)
+    c_c = c_mat.reshape(bsz, nc, q, n)
+
+    # intra-chunk: M[i,j] = exp(cum_i - cum_j) * (c_i · b_j), i >= j.
+    # Mask INSIDE the exponent: exp() of the (positive) anti-causal
+    # entries would overflow and poison gradients through jnp.where.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    l_mat = jnp.exp(jnp.where(causal, diff, -1e30))
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c,
+                    preferred_element_type=jnp.float32)
+    m = cb[..., None] * l_mat                               # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, x_c,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk input state: S_c = Σ_j exp(cum_last - cum_j) b_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                         decay_to_end, b_c, x_c,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk: sequential state pass
+    chunk_decay = jnp.exp(jnp.sum(la_c, axis=2))            # (B,NC,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inputs):
+        s_c, dec = inputs                                   # (B,H,P,N),(B,H)
+        out_state = state                                    # state BEFORE chunk
+        new_state = state * dec[:, :, None, None] + s_c
+        return new_state, out_state
+
+    s_seq = jnp.moveaxis(s_chunk, 1, 0)                     # (NC,B,H,P,N)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)                 # (NC,B,H)
+    final_state, prev_states = jax.lax.scan(step, init_state,
+                                            (s_seq, d_seq), unroll=unroll)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,NC,H,P,N)
+
+    # y_inter[i] = exp(cum_i) * c_i · state_{c-1}
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                         jnp.exp(cum), c_c, prev_states,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def mamba_block(params, x, cfg: LMConfig, policy: ApproxPolicy, *,
+                cache: Optional[dict] = None, layer_tag: str = "mamba"
+                ) -> tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,D).  cache = {"conv": (B,W-1,C), "state": (B,H,P,N)} for
+    O(1) decode; None for full-sequence (training/prefill from zero)."""
+    bsz, s, d = x.shape
+    dd = ssm_dims(cfg)
+    di, h, n, p = dd["d_inner"], dd["n_heads"], dd["n"], cfg.ssm_head_dim
+
+    proj = policy.matmul(f"{layer_tag}.in_proj", x, params["in_proj"])
+    z, xs, b_mat, c_mat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    xbc = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state)
+    xs, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xs_h = xs.reshape(bsz, s, h, p).astype(jnp.float32)
+    b32 = b_mat.astype(jnp.float32)
+    c32 = c_mat.astype(jnp.float32)
+
+    if cache is None:
+        y, _final = _ssd_chunked(xs_h, dt, a, b32, c32, cfg.ssm_chunk,
+                                 unroll=cfg.scan_unroll)
+        new_cache = None
+    elif s == 1:
+        state = cache["state"]                       # (B,H,P,N)
+        dtl = dt[:, 0, :]                            # (B,H)
+        dec = jnp.exp(dtl * a[None, :])
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtl, xs_h[:, 0], b32[:, 0])
+        state = state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c32[:, 0], state)[:, None]
+        new_cache = {"conv": new_conv, "state": state}
+    else:  # prefill with cache carry-out
+        y, final = _ssd_chunked(xs_h, dt, a, b32, c32, cfg.ssm_chunk,
+                                unroll=cfg.scan_unroll)
+        new_cache = {"conv": new_conv, "state": final}
+
+    y = y + xs_h * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), params["norm"], cfg.norm_eps)
+    out = policy.matmul(f"{layer_tag}.out_proj", y, params["out_proj"])
+    return out.astype(cfg.dtype), new_cache
+
+
+def init_mamba_cache(cfg: LMConfig, batch: int) -> dict:
+    dd = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dd["conv_dim"]),
+                          cfg.dtype),
+        "state": jnp.zeros((batch, dd["n_heads"], cfg.ssm_head_dim,
+                            dd["n"]), jnp.float32),
+    }

@@ -1,0 +1,179 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and keys/values are produced through low-rank compressions:
+  c_q  = x W_dq                (q_lora)
+  q    = RMSNorm(c_q) W_uq     per-head [d_nope | d_rope]
+  c_kv = x W_dkv               (kv_lora)   <- THIS is the KV cache
+  k_nope, v = RMSNorm(c_kv) W_uk / W_uv
+  k_rope = x W_kr              single shared rope head
+The decode cache stores only (c_kv, k_rope): 512+64 floats per token —
+the memory win that makes 32k-context batch-128 decode feasible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy
+
+from .common import (LMConfig, apply_rope, dense_init, rms_norm,
+                     rope_tables, split_keys)
+
+
+def init_mla(key, cfg: LMConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    k = split_keys(key, ["wdq", "wuq", "wqr", "wdkv", "wuk", "wuv", "wkr",
+                         "wo", "qn", "kvn"])
+    return {
+        "wdq": dense_init(k["wdq"], (d, cfg.q_lora)),
+        "wuq": dense_init(k["wuq"], (cfg.q_lora, h * dn)),
+        "wqr": dense_init(k["wqr"], (cfg.q_lora, h * dr)),
+        "wdkv": dense_init(k["wdkv"], (d, cfg.kv_lora)),
+        "wuk": dense_init(k["wuk"], (cfg.kv_lora, h * dn)),
+        "wuv": dense_init(k["wuv"], (cfg.kv_lora, h * dv)),
+        "wkr": dense_init(k["wkr"], (d, dr)),
+        "wo": dense_init(k["wo"], (h * dv, d)),
+        "qn": jnp.ones((cfg.q_lora,), jnp.float32),
+        "kvn": jnp.ones((cfg.kv_lora,), jnp.float32),
+    }
+
+
+def _mla_core(q_n, q_r, k_n, k_r, v, mask_bias, cfg: LMConfig) -> jax.Array:
+    """q_n:(B,S,H,dn) q_r:(B,S,H,dr) k_n:(B,T,H,dn) k_r:(B,T,dr)
+    v:(B,T,H,dv) -> (B,S,H,dv)."""
+    scale = 1.0 / np.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    s_n = jnp.einsum("bshd,bthd->bhst", q_n, k_n,
+                     preferred_element_type=jnp.float32)
+    s_r = jnp.einsum("bshd,btd->bhst", q_r, k_r,
+                     preferred_element_type=jnp.float32)
+    scores = (s_n + s_r) * scale + mask_bias
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def _mla_core_chunked(q_n, q_r, k_n, k_r, v, q_pos0, t_valid,
+                      cfg: LMConfig, unroll: bool = False) -> jax.Array:
+    """Flash-style MLA: online softmax over T chunks — never builds the
+    (H,S,T) score tensor (the dominant memory-roofline term of the
+    deepseek train/prefill cells; see EXPERIMENTS.md §Perf-2)."""
+    b, s, h, dn = q_n.shape
+    t = k_n.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    c = min(cfg.kv_chunk, t)
+    pad = (-t) % c
+    if pad:
+        k_n = jnp.pad(k_n, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_r = jnp.pad(k_r, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = k_n.shape[1] // c
+    kn_c = jnp.moveaxis(k_n.reshape(b, nc, c, h, dn), 1, 0)
+    kr_c = jnp.moveaxis(k_r.reshape(b, nc, c, -1), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(b, nc, c, h, dv), 1, 0)
+    idx0 = jnp.arange(nc, dtype=jnp.int32) * c
+    q_pos = q_pos0 + jnp.arange(s, dtype=jnp.int32)
+
+    m0 = jnp.full((b, h, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dv), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kn, kr, vc, i0 = inputs
+        sc = jnp.einsum("bshd,bchd->bhsc", q_n, kn,
+                        preferred_element_type=jnp.float32)
+        sc = sc + jnp.einsum("bshd,bcd->bhsc", q_r, kr,
+                             preferred_element_type=jnp.float32)
+        sc = sc * scale
+        key_pos = i0 + jnp.arange(c, dtype=jnp.int32)
+        valid = (key_pos[None, :] <= q_pos[:, None]) \
+            & (key_pos[None, :] < t_valid)
+        sc = jnp.where(valid[None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhsc,bchd->bhsd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kn_c, kr_c, v_c, idx0), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2)   # (B,S,H,dv)
+
+
+def mla_attention(params, x, cfg: LMConfig, policy: ApproxPolicy, *,
+                  positions: jax.Array, cache: Optional[dict] = None,
+                  layer_tag: str = "mla") -> tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    cq = policy.matmul(f"{layer_tag}.wdq", x, params["wdq"])
+    cq = rms_norm(cq, params["qn"], cfg.norm_eps)
+    q_n = policy.matmul(f"{layer_tag}.wuq", cq, params["wuq"]
+                        ).reshape(b, s, h, dn)
+    q_r = policy.matmul(f"{layer_tag}.wqr", cq, params["wqr"]
+                        ).reshape(b, s, h, dr)
+
+    ckv = policy.matmul(f"{layer_tag}.wdkv", x, params["wdkv"])
+    ckv = rms_norm(ckv, params["kvn"], cfg.norm_eps)
+    kr = policy.matmul(f"{layer_tag}.wkr", x, params["wkr"])  # (B,S,dr)
+
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_r = apply_rope(q_r, cos, sin)
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        pos = cache["pos"]
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))
+        new_cache = {"ckv": ckv_all, "kr": kr_all, "pos": pos + s}
+        t_len = ckv_all.shape[1]
+        q_pos0, t_valid = pos, pos + s
+    else:
+        ckv_all, kr_all = ckv, kr
+        new_cache = None
+        t_len = s
+        q_pos0, t_valid = jnp.zeros((), jnp.int32), jnp.int32(s)
+
+    # expand compressed cache to per-head keys/values
+    k_n = policy.matmul(f"{layer_tag}.wuk", ckv_all, params["wuk"]
+                        ).reshape(b, t_len, h, dn)
+    v = policy.matmul(f"{layer_tag}.wuv", ckv_all, params["wuv"]
+                      ).reshape(b, t_len, h, dv)
+
+    if cfg.attn_impl == "chunked":
+        out = _mla_core_chunked(
+            q_n.astype(cfg.dtype), q_r.astype(cfg.dtype),
+            k_n.astype(cfg.dtype), kr_all.astype(cfg.dtype),
+            v.astype(cfg.dtype), q_pos0, t_valid, cfg,
+            unroll=cfg.scan_unroll)
+    else:
+        t = jnp.arange(t_len)
+        valid = t[None, :] <= (q_pos0 + jnp.arange(s)[:, None])
+        bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+        out = _mla_core(q_n.astype(cfg.dtype), q_r.astype(cfg.dtype),
+                        k_n.astype(cfg.dtype), kr_all.astype(cfg.dtype),
+                        v.astype(cfg.dtype), bias, cfg)
+    out = out.reshape(b, s, h * dv)
+    out = policy.matmul(f"{layer_tag}.wo", out, params["wo"])
+    return out.astype(cfg.dtype), new_cache
+
+
+def init_mla_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), cfg.dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

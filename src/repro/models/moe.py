@@ -1,0 +1,222 @@
+"""Mixture-of-Experts layer with sort-based, capacity-bounded dispatch.
+
+Expert-parallel friendly: expert weights are (E, d, f) tensors sharded
+on E over the `model` mesh axis; dispatch builds an (E, C, d) buffer via
+sorted scatter (O(T·k) memory — no (T, E) one-hot), expert compute is a
+single batched matmul over E (MXU), combine gathers back with routing
+weights.  Tokens above a capacity of ``C = ceil(T·k/E · capacity_factor)``
+are dropped (standard GShard-style dropping — the auxiliary load-balance
+loss keeps drops rare).
+
+Shared experts (DeepSeek-V2) are a dense FFN over all tokens, added to
+the routed output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.backend import backend_matmul
+from repro.approx.layers import ApproxPolicy
+
+from .common import (LMConfig, activation, dense_init, hint_axis,
+                     split_keys)
+
+
+def init_moe(key, cfg: LMConfig) -> dict:
+    e = cfg.n_experts
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    k = split_keys(key, ["router", "wi", "wg", "wo", "shared"])
+    p = {
+        "router": dense_init(k["router"], (d, e), scale=0.02),
+        "wi": dense_init(k["wi"], (e, d, f)),
+        "wo": dense_init(k["wo"], (e, f, d)),
+    }
+    if cfg.act == "silu":
+        p["wg"] = dense_init(k["wg"], (e, d, f))
+    if cfg.n_shared_experts > 0:
+        from .common import init_ffn
+        import dataclasses
+        shared_ff = f * cfg.n_shared_experts
+        p["shared"] = init_ffn(k["shared"], cfg, d_ff=shared_ff)
+    return p
+
+
+def _expert_matmul(policy: ApproxPolicy, name: str, x: jax.Array,
+                   w: jax.Array) -> jax.Array:
+    """x: (E,C,d) @ w: (E,d,f) -> (E,C,f), through the approx backend
+    per expert (vmapped over E)."""
+    be = policy.backend_for(name)
+    return jax.vmap(lambda xe, we: backend_matmul(xe, we, be))(x, w)
+
+
+def moe_ffn(params, x, cfg: LMConfig, policy: ApproxPolicy,
+            layer_tag: str = "moe") -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (B,S,D), aux load-balance loss (scalar f32).
+
+    With ``cfg.moe_blocks > 1`` dispatch runs block-locally (sorted
+    scatter within each token block, capacity per block): when blocks
+    align with the DP shards, the argsort/cumsum/scatter become
+    shard-local and the global-sort collectives disappear
+    (EXPERIMENTS.md §Perf-1)."""
+    b, s, d = x.shape
+    t = b * s
+    nb = cfg.moe_blocks
+    if nb > 1 and t % nb == 0 and t // nb >= cfg.top_k:
+        # vmap over blocks: experts stay replicated within each data
+        # shard and XLA all-gathers the (small) expert weights — measured
+        # 3.5x better than forcing an EP-sharded scatter target
+        # (EXPERIMENTS.md §Perf-1, iteration A1b).
+        xb = x.reshape(nb, t // nb, d)
+        yb, aux = jax.vmap(
+            lambda xe: _moe_tokens(params, xe, cfg, policy, layer_tag))(xb)
+        return yb.reshape(b, s, d).astype(x.dtype), jnp.mean(aux)
+    y, aux = _moe_tokens(params, x.reshape(t, d), cfg, policy, layer_tag)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_blocked(params, xb, cfg: LMConfig, policy: ApproxPolicy,
+                 layer_tag: str) -> tuple[jax.Array, jax.Array]:
+    """Block-local dispatch, explicitly batched over blocks so GSPMD
+    keeps blocks on the data axes and experts on 'model'.
+    xb: (NB, TB, D) -> (NB, TB, D)."""
+    from .common import hint_spec
+    nb, tb, d = xb.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xb = hint_spec(xb, {0: "batch"})
+
+    logits = jnp.einsum("btd,de->bte", xb.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                 # (NB,TB,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[top_ids.reshape(-1)].add(
+        1.0 / (nb * tb * k))
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(min(tb * k,
+                  max(np.ceil(tb * k / e * cfg.capacity_factor), 4)))
+    flat_e = top_ids.reshape(nb, tb * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)        # local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    bidx = jnp.arange(nb, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((nb, e), jnp.int32).at[
+        bidx, flat_e].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((nb, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1)
+    pos_in_e = jnp.arange(tb * k, dtype=jnp.int32)[None, :] \
+        - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    src_token = order // k                                    # (NB, TB*k)
+
+    buf = jnp.zeros((nb, e, cap, d), xb.dtype)
+    gathered_x = jnp.take_along_axis(
+        xb, src_token[..., None], axis=1)                     # (NB,TB*k,D)
+    buf = buf.at[bidx, sorted_e, pos_in_e].set(
+        gathered_x.astype(xb.dtype), mode="drop")
+    buf = hint_spec(buf, {0: "batch", 1: "model"})
+
+    def emm(name, h, w):
+        be = policy.backend_for(name)
+        from repro.approx.backend import backend_matmul
+        fn = jax.vmap(jax.vmap(backend_matmul, in_axes=(0, 0, None)),
+                      in_axes=(0, None, None))
+        return fn(h, w, be)                                   # (NB,E,C,f)
+
+    hidden = emm(f"{layer_tag}.wi", buf, params["wi"])
+    if cfg.act == "silu":
+        gate = emm(f"{layer_tag}.wg", buf, params["wg"])
+        hidden = jax.nn.silu(gate) * hidden
+    else:
+        hidden = activation(hidden, cfg.act)
+    out_buf = emm(f"{layer_tag}.wo", hidden.astype(xb.dtype),
+                  params["wo"])
+    out_buf = hint_spec(out_buf, {0: "batch", 1: "model"})
+
+    in_cap = pos_in_e < cap
+    taken = out_buf[bidx, sorted_e,
+                    jnp.minimum(pos_in_e, cap - 1)]           # (NB,TB*k,D)
+    taken = jnp.where(in_cap[..., None], taken, 0.0)
+    slot_out = jnp.zeros((nb, tb * k, d), out_buf.dtype).at[
+        bidx, order].set(taken)
+    slot_out = slot_out.reshape(nb, tb, k, d)
+    y = jnp.sum(slot_out
+                * top_w[..., None].astype(slot_out.dtype), axis=2)
+
+    if cfg.n_shared_experts > 0:
+        from .common import ffn
+        y = y + ffn(params["shared"], xb, cfg, policy,
+                    layer_tag=f"{layer_tag}.shared").astype(y.dtype)
+    return hint_spec(y.astype(xb.dtype), {0: "batch"}), aux
+
+
+def _moe_tokens(params, xf, cfg: LMConfig, policy: ApproxPolicy,
+                layer_tag: str = "moe") -> tuple[jax.Array, jax.Array]:
+    """xf: (T,D) -> (T,D), aux loss."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    # --- routing ---
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)             # (T,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # aux loss (Switch-style): E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_ids.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    # floor of 4 and ceiling of t*k: tiny decode batches would otherwise
+    # drop tokens that a full forward pass keeps
+    cap = int(min(t * k,
+                  max(np.ceil(t * k / e * cfg.capacity_factor), 4)))
+    flat_e = top_ids.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)              # (T*k,)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    src_token = order // k                                 # (T*k,)
+
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[sorted_e, pos_in_e].set(
+        xf[src_token].astype(xf.dtype), mode="drop")
+    if cfg.moe_blocks <= 1:  # (hint not applicable under vmap)
+        buf = hint_axis(buf, 0, "model")   # EP: expert dim on 'model'
+
+    # --- expert compute (batched over E; EP shards this axis) ---
+    hidden = _expert_matmul(policy, f"{layer_tag}.wi", buf, params["wi"])
+    if cfg.act == "silu":
+        gate = _expert_matmul(policy, f"{layer_tag}.wg", buf, params["wg"])
+        hidden = jax.nn.silu(gate) * hidden
+    else:
+        hidden = activation(hidden, cfg.act)
+    out_buf = _expert_matmul(policy, f"{layer_tag}.wo",
+                             hidden.astype(xf.dtype), params["wo"])
+
+    # --- combine ---
+    in_cap = pos_in_e < cap
+    gathered = out_buf[sorted_e, jnp.minimum(pos_in_e, cap - 1)]
+    gathered = jnp.where(in_cap[:, None], gathered, 0.0)
+    slot_out = jnp.zeros((t * k, d), out_buf.dtype).at[order].set(gathered)
+    slot_out = slot_out.reshape(t, k, d)
+    y = jnp.sum(slot_out * top_w[..., None].astype(slot_out.dtype), axis=1)
+
+    # --- shared experts (dense path over all tokens) ---
+    if cfg.n_shared_experts > 0:
+        from .common import ffn
+        y = y + ffn(params["shared"], xf, cfg, policy,
+                    layer_tag=f"{layer_tag}.shared").astype(y.dtype)
+
+    return y.astype(xf.dtype), aux

@@ -1,0 +1,31 @@
+"""Family dispatch: maps LMConfig.family to init/forward functions."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from . import decoder, encdec
+from .common import LMConfig
+
+
+class ModelFns:
+    def __init__(self, init_params, forward_train, init_cache,
+                 forward_prefill, forward_decode):
+        self.init_params = init_params
+        self.forward_train = forward_train
+        self.init_cache = init_cache
+        self.forward_prefill = forward_prefill
+        self.forward_decode = forward_decode
+
+
+_DECODER = ModelFns(decoder.init_params, decoder.forward_train,
+                    decoder.init_cache, decoder.forward_prefill,
+                    decoder.forward_decode)
+_ENCDEC = ModelFns(encdec.init_params, encdec.forward_train,
+                   encdec.init_cache, encdec.forward_prefill,
+                   encdec.forward_decode)
+
+
+def model_fns(cfg: LMConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return _ENCDEC
+    return _DECODER

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + greedy/temperature decode with a
+static KV cache, jitted end-to-end.  The approximate-multiplier backend
+(int8 + LUT/lowrank) is selected per request batch via ApproxPolicy —
+this is the "accelerator being emulated" serving path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy, EXACT_POLICY
+from repro.models.common import LMConfig
+from repro.models.registry import model_fns
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: LMConfig, params,
+                 policy: ApproxPolicy = EXACT_POLICY):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.fns = model_fns(cfg)
+        self._prefill = jax.jit(
+            lambda p, b, c: self.fns.forward_prefill(p, b, c, cfg, policy))
+        self._decode = jax.jit(
+            lambda p, t, c: self.fns.forward_decode(p, t, c, cfg, policy))
+
+    def generate(self, prompts: np.ndarray, serve_cfg: ServeConfig,
+                 extras: Optional[dict] = None) -> np.ndarray:
+        """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
+        b, s = prompts.shape
+        max_len = s + serve_cfg.max_new_tokens
+        cache = self.fns.init_cache(self.cfg, b, max_len)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        logits, cache = self._prefill(self.params, batch, cache)
+        key = jax.random.PRNGKey(serve_cfg.seed)
+        out = []
+        tok = self._sample(logits, serve_cfg, key)
+        out.append(tok)
+        for i in range(serve_cfg.max_new_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, serve_cfg, key)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    @staticmethod
+    def _sample(logits, serve_cfg: ServeConfig, key) -> jax.Array:
+        if serve_cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / serve_cfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,177 @@
+"""Fault-tolerant training loop (DESIGN.md §6).
+
+* microbatched gradient accumulation (``lax.scan`` — XLA overlaps each
+  microbatch's reduce with the next microbatch's backward),
+* NaN/Inf guard: a non-finite loss triggers restore-from-last-checkpoint
+  and a data-window skip (the poisoned batches are never replayed),
+* straggler monitor: per-step wall times, flags steps slower than
+  ``straggler_factor`` x running median (on a real cluster this feeds
+  the re-slicing controller; here it logs),
+* periodic atomic checkpoints via ``CheckpointManager``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .checkpoint import CheckpointManager
+from .optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    microbatches: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    nan_skip_window: int = 8           # batches skipped after a NaN event
+    straggler_factor: float = 3.0
+    async_checkpoint: bool = False
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1) -> Callable:
+    """loss_fn(params, batch) -> scalar.  Returns
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1 every batch leaf must be shaped
+    (microbatches, mb, ...); gradients are accumulated in f32.
+    """
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc_l + l,
+                        tree_add(acc_g, jax.tree.map(
+                            lambda x: x.astype(jnp.float32), g))), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zero), batch)
+            loss = loss / microbatches
+            grads = tree_scale(grads, 1.0 / microbatches)
+        new_params, new_state, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.times: list[float] = []
+        self.window = window
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) >= 8:
+            med = float(np.median(hist[:-1]))
+            if dt > self.factor * med:
+                self.flagged.append((step, dt))
+                return True
+        return False
+
+
+class Trainer:
+    """Host-side orchestration: data, jitted step, guard, checkpoints."""
+
+    def __init__(self, loss_fn: Callable, params: Any,
+                 opt_cfg: OptimizerConfig, loop_cfg: TrainLoopConfig,
+                 donate: bool = True):
+        self.loop_cfg = loop_cfg
+        self.params = params
+        self.opt_state = init_opt_state(params)
+        self.step_fn = jax.jit(
+            make_train_step(loss_fn, opt_cfg, loop_cfg.microbatches),
+            donate_argnums=(0, 1) if donate else ())
+        self.ckpt = CheckpointManager(loop_cfg.ckpt_dir,
+                                      keep=loop_cfg.ckpt_keep,
+                                      async_save=loop_cfg.async_checkpoint)
+        self.monitor = StragglerMonitor(loop_cfg.straggler_factor)
+        self.step = 0
+        self.nan_events: list[int] = []
+        self.history: list[dict] = []
+
+    def maybe_resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        (self.params, self.opt_state), meta = self.ckpt.restore(
+            (self.params, self.opt_state))
+        self.step = int(meta.get("step", latest))
+        return True
+
+    def _save(self) -> None:
+        self.ckpt.save(self.step, (self.params, self.opt_state),
+                       metadata={"step": self.step},
+                       block=not self.loop_cfg.async_checkpoint)
+
+    def run(self, batch_iter, log: Optional[Callable[[str], None]] = None
+            ) -> list[dict]:
+        log = log or (lambda s: print(s, flush=True))
+        cfg = self.loop_cfg
+        self._save()  # step-0 baseline for NaN recovery
+        skip_until = -1
+        while self.step < cfg.total_steps:
+            batch = next(batch_iter)
+            if self.step <= skip_until:
+                self.step += 1
+                continue
+            t0 = time.perf_counter()
+            new_params, new_opt, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if not np.isfinite(loss):
+                # fault path: restore last good state, skip the window
+                self.nan_events.append(self.step)
+                log(f"[guard] non-finite loss at step {self.step}; "
+                    f"restoring + skipping {cfg.nan_skip_window} batches")
+                (self.params, self.opt_state), meta = self.ckpt.restore(
+                    (jax.tree.map(np.asarray, new_params),
+                     jax.tree.map(np.asarray, new_opt)))
+                skip_until = self.step + cfg.nan_skip_window
+                self.step += 1
+                continue
+            self.params, self.opt_state = new_params, new_opt
+            if self.monitor.record(self.step, dt):
+                log(f"[straggler] step {self.step} took {dt * 1e3:.0f}ms "
+                    f"(>{cfg.straggler_factor}x median)")
+            rec = {"step": self.step, "loss": loss, "ms": dt * 1e3,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"])}
+            self.history.append(rec)
+            if self.step % cfg.log_every == 0:
+                log(f"step {rec['step']:>6} loss {rec['loss']:.4f} "
+                    f"gnorm {rec['grad_norm']:.3f} {rec['ms']:.0f}ms")
+            self.step += 1
+            if self.step % cfg.ckpt_every == 0:
+                self._save()
+        self._save()
+        self.ckpt.wait()
+        return self.history

@@ -1,0 +1,113 @@
+"""AdamW + schedules + global-norm clipping, implemented directly in JAX
+(no optax dependency).  Optimizer state shards exactly like the params
+(same pytree structure), which is what lets GSPMD place m/v alongside
+the fully-sharded parameters (ZeRO-style, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_DECAY_EXEMPT = ("norm", "bn_g", "bn_b", "bias", "b", "dt_bias", "a_log",
+                 "d_skip", "qn", "kvn", "qnorm", "knorm")
+
+
+def _decayable(path: str) -> bool:
+    last = path.split("/")[-1]
+    return not any(last.startswith(e) or last == e for e in _DECAY_EXEMPT)
+
+
+def _tree_paths(tree) -> dict:
+    out = {}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        out["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)] = leaf
+    return out
+
+
+def adamw_update(params, grads, state: OptState, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                         * g.astype(jnp.float32), state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+
+    # weight decay mask by param-path name
+    paths = _tree_paths(params)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    keys = list(paths.keys())
+
+    def upd(p, m, v, path):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        wd = cfg.weight_decay if _decayable(path) else 0.0
+        return (p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    flat_m = jax.tree_util.tree_leaves(new_m)
+    flat_v = jax.tree_util.tree_leaves(new_v)
+    new_flat = [upd(p, m, v, k)
+                for p, m, v, k in zip(flat_p, flat_m, flat_v, keys)]
+    new_params = jax.tree_util.tree_unflatten(treedef, new_flat)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,156 @@
+"""Circuit core: seeds, families, metrics, cost, CGP."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import families, gates, seeds
+from repro.core.cgp import CgpParams, ParetoArchive, dominates, evolve, mutate
+from repro.core.cost import evaluate_cost, relative_power
+from repro.core.metrics import ErrorReport, evaluate_errors
+from repro.core.netlist import (Netlist, exhaustive_inputs, pack_operands,
+                                unpack_outputs, unpack_outputs_object)
+
+
+# ---------------------------------------------------------------- seeds
+@pytest.mark.parametrize("w", [2, 3, 4, 8])
+def test_array_multiplier_exact(w):
+    mul = seeds.array_multiplier(w)
+    a = np.arange(2 ** w, dtype=np.uint64)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    out = mul.eval_ints(A.reshape(-1), B.reshape(-1), widths=[w, w])
+    assert np.array_equal(out, (A * B).reshape(-1))
+
+
+@pytest.mark.parametrize("w", [2, 4, 8, 16])
+def test_ripple_adder_exact(w):
+    add = seeds.ripple_carry_adder(w)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2 ** w, 500).astype(np.uint64)
+    b = rng.integers(0, 2 ** w, 500).astype(np.uint64)
+    out = add.eval_ints(a, b, widths=[w, w])
+    assert np.array_equal(out, a + b)
+
+
+def test_wide_adder_object_path():
+    add = seeds.ripple_carry_adder(128)
+    rep = evaluate_errors(add, add, samples=256)
+    assert rep.mae == 0.0 and rep.er == 0.0 and not rep.exhaustive
+
+
+# ---------------------------------------------------------------- families
+def test_truncated_multiplier_semantics():
+    tr = families.truncated_multiplier(8, 2)
+    a = np.arange(256, dtype=np.uint64)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    got = tr.eval_ints(A.reshape(-1), B.reshape(-1), widths=[8, 8])
+    want = ((A >> 2 << 2) * (B >> 2 << 2)).reshape(-1)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("h,v", [(0, 2), (1, 3), (2, 7), (0, 6)])
+def test_bam_semantics(h, v):
+    bm = families.bam_multiplier(8, h, v)
+    a = np.arange(0, 256, 7, dtype=np.uint64)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    want = np.zeros_like(A)
+    for i in range(8):
+        for j in range(8):
+            if i >= h and i + j >= v:
+                want += (((A >> j) & 1) * ((B >> i) & 1)) << (i + j)
+    got = bm.eval_ints(A.reshape(-1), B.reshape(-1), widths=[8, 8])
+    assert np.array_equal(got, want.reshape(-1))
+
+
+def test_loa_adder_semantics():
+    loa = families.loa_adder(8, 3)
+    a = np.arange(256, dtype=np.uint64)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    low = (A & 7) | (B & 7)
+    cin = ((A >> 2) & 1) & ((B >> 2) & 1)
+    want = (low | (((A >> 3) + (B >> 3) + cin) << 3)).reshape(-1)
+    got = loa.eval_ints(A.reshape(-1), B.reshape(-1), widths=[8, 8])
+    assert np.array_equal(got, want)
+
+
+def test_family_power_ordering():
+    """More truncation => strictly less power (paper Table II trend)."""
+    exact = seeds.array_multiplier(8)
+    pw = [relative_power(families.truncated_multiplier(8, k), exact)
+          for k in (1, 2, 3)]
+    assert pw[0] > pw[1] > pw[2]
+    assert all(0 < p < 1 for p in pw)
+
+
+# ---------------------------------------------------------------- metrics
+def test_error_report_paper_case():
+    """BAM(0,2) has analytic MAE = 1.25 (3 dropped partial products)."""
+    exact = seeds.array_multiplier(8)
+    rep = evaluate_errors(families.bam_multiplier(8, 0, 2), exact)
+    assert abs(rep.mae - 1.25) < 1e-12
+    assert rep.exhaustive
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 32))
+def test_metric_invariants(seed):
+    """MAE <= WCE, MSE >= MAE^2, 0 <= ER <= 1, metrics vanish iff equal."""
+    rng = np.random.default_rng(seed)
+    exact = rng.integers(0, 1000, 64).astype(np.float64)
+    approx = exact + rng.integers(-5, 6, 64)
+    from repro.core.metrics import error_report_from_values
+    rep = error_report_from_values(approx, exact)
+    assert rep.mae <= rep.wce + 1e-12
+    assert rep.mse + 1e-9 >= rep.mae ** 2   # Jensen
+    assert 0.0 <= rep.er <= 1.0
+    if np.array_equal(approx, exact):
+        assert rep.wce == 0.0
+
+
+# ---------------------------------------------------------------- packing
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2 ** 31))
+def test_pack_unpack_roundtrip(num, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2 ** 16, num).astype(np.uint64)
+    planes = pack_operands([vals], [16])
+    back = unpack_outputs(planes, 16, num)
+    assert np.array_equal(vals, back)
+    back_obj = unpack_outputs_object(planes, 16, num)
+    assert all(int(a) == int(b) for a, b in zip(vals, back_obj))
+
+
+# ---------------------------------------------------------------- CGP
+def test_mutation_validity():
+    nl = seeds.array_multiplier(4)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        nl = mutate(nl, rng, 5)
+        nl.validate()
+
+
+def test_evolution_reduces_area():
+    exact = seeds.array_multiplier(6)
+    res = evolve(exact, exact,
+                 CgpParams(metric="mae", e_max=100.0, generations=120,
+                           seed=3))
+    assert res.errors.mae <= 100.0
+    assert res.cost_area <= evaluate_cost(exact).area
+    assert res.cost_area < evaluate_cost(exact).area  # some progress
+
+
+def test_pareto_archive():
+    a = ParetoArchive()
+    assert a.add((1.0, 5.0), "a")
+    assert a.add((2.0, 1.0), "b")
+    assert not a.add((2.0, 6.0), "dominated")
+    assert a.add((0.5, 0.5), "dominates-all")
+    assert len(a) == 1
+    assert dominates((1, 1), (2, 2)) and not dominates((1, 2), (2, 1))
+
+
+def test_compact_preserves_function():
+    nl = families.bam_multiplier(8, 1, 4)
+    c = nl.compact()
+    planes = exhaustive_inputs(16)
+    assert np.array_equal(nl.eval_words(planes), c.eval_words(planes))
+    assert c.n_nodes <= nl.n_nodes

@@ -1,0 +1,66 @@
+"""HLO-text analysis: the collective-byte accounting that feeds the
+roofline (regression tests for the shape-vs-opname parsing bug)."""
+from repro.launch import hlo_analysis as ha
+
+
+SAMPLE = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %convert.1 = bf16[128,256]{1,0} convert(%p0)
+  %all-gather.2 = bf16[128,4096]{1,0} all-gather(%convert.1), dimensions={1}
+  %all-reduce.3 = f32[128,256]{1,0} all-reduce(%p0), to_apply=%add
+  %ars.4 = f32[128,256]{1,0} all-reduce-start(%p0), to_apply=%add
+  %ard.5 = f32[128,256]{1,0} all-reduce-done(%ars.4)
+  %tup.6 = (f32[2,2]{1,0}, s32[4]{0}) all-to-all(%p0, %p0)
+  ROOT %copy.7 = f32[128,256]{1,0} copy(%all-reduce.3)
+}
+"""
+
+
+def test_parse_def_basic():
+    d = ha._parse_def("  %convert.1 = bf16[128,256]{1,0} convert(%p0)")
+    assert d.op == "convert"
+    assert d.shape.startswith("bf16[128,256]")
+    assert d.name == "convert.1"
+
+
+def test_parse_def_tuple_shape():
+    d = ha._parse_def(
+        "  %t = (f32[2,2]{1,0}, s32[4]{0}) all-to-all(%a, %b)")
+    assert d.op == "all-to-all"
+    assert ha.shape_bytes(d.shape) == 2 * 2 * 4 + 4 * 4
+
+
+def test_parse_def_root():
+    d = ha._parse_def("  ROOT %copy.7 = f32[8]{0} copy(%x)")
+    assert d.op == "copy" and d.name == "copy.7"
+
+
+def test_shape_bytes():
+    assert ha.shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+    assert ha.shape_bytes("pred[3]") == 3
+    assert ha.shape_bytes("f32[]") == 4  # scalar
+
+
+def test_collective_bytes_sample():
+    out = ha.collective_bytes(SAMPLE)
+    # all-gather operand = bf16[128,256] = 65536 B
+    assert out["all-gather"]["bytes"] == 128 * 256 * 2
+    # two all-reduce contributions (plain + -start), NOT the -done
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 2 * 128 * 256 * 4
+    # all-to-all: two f32[128,256] operands
+    assert out["all-to-all"]["bytes"] == 2 * 128 * 256 * 4
+    assert out["total_bytes"] == (out["all-gather"]["bytes"]
+                                  + out["all-reduce"]["bytes"]
+                                  + out["all-to-all"]["bytes"])
+
+
+def test_convert_not_confused_with_collective():
+    """Regression: a greedy shape regex chopped 'convert(' into op 't'
+    and mis-binned collective lines."""
+    hist = dict(ha.op_histogram(SAMPLE))
+    assert "convert" in hist and "t" not in hist
+    assert hist["parameter"] == 1

@@ -1,0 +1,113 @@
+"""Library: build, Pareto selection, persistence, LUTs, low-rank."""
+import numpy as np
+import pytest
+
+from repro.core.library import (ApproxLibrary, build_default_library,
+                                CircuitEntry)
+from repro.core.luts import (decompose_lut, exact_mul_lut, lut_from_netlist,
+                             rank_for_tolerance, rank_profile)
+from repro.core import families, seeds
+
+
+@pytest.fixture(scope="module")
+def tiny_lib():
+    return build_default_library("tiny")
+
+
+def test_library_counts(tiny_lib):
+    table = tiny_lib.counts_table()
+    kinds = {(r["circuit"], r["bit_width"]) for r in table}
+    assert ("multiplier", 8) in kinds and ("adder", 8) in kinds
+    assert len(tiny_lib.entries) > 50
+
+
+def test_pareto_front_is_nondominated(tiny_lib):
+    front = tiny_lib.pareto_front("multiplier", 8, "mae")
+    assert front, "empty front"
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            assert not (b.rel_power <= a.rel_power
+                        and b.errors.mae <= a.errors.mae
+                        and (b.rel_power < a.rel_power
+                             or b.errors.mae < a.errors.mae)), \
+                f"{a.name} dominated by {b.name}"
+
+
+def test_exact_is_on_every_front(tiny_lib):
+    """The exact multiplier has zero error: it must be Pareto optimal."""
+    for metric in ("mae", "wce", "mre"):
+        front = tiny_lib.pareto_front("multiplier", 8, metric)
+        assert any(e.source == "exact" for e in front)
+
+
+def test_case_study_selection(tiny_lib):
+    sel = tiny_lib.case_study_selection(per_metric=5)
+    assert 3 <= len(sel) <= 25      # union of 5 fronts, deduped
+    names = [e.name for e in sel]
+    assert len(names) == len(set(names))
+
+
+def test_spread_along_power(tiny_lib):
+    front = tiny_lib.pareto_front("multiplier", 8, "mae")
+    sel = ApproxLibrary.spread_along_power(front, 4)
+    assert len(sel) <= 4
+    powers = [e.rel_power for e in sel]
+    assert powers == sorted(powers) or powers == sorted(powers,
+                                                        reverse=True) \
+        or len(set(powers)) == len(powers)
+
+
+def test_save_load_roundtrip(tiny_lib, tmp_path):
+    path = str(tmp_path / "lib.json")
+    tiny_lib.save(path)
+    lib2 = ApproxLibrary.load(path)
+    assert set(lib2.entries) == set(tiny_lib.entries)
+    name = next(iter(tiny_lib.entries))
+    a, b = tiny_lib.entries[name], lib2.entries[name]
+    assert a.errors.mae == b.errors.mae
+    assert a.cost.power == b.cost.power
+    np.testing.assert_array_equal(a.netlist.funcs, b.netlist.funcs)
+
+
+def test_lut_materialization(tiny_lib):
+    lut = tiny_lib.lut("mul8u_exact")
+    assert lut.shape == (256, 256)
+    np.testing.assert_array_equal(lut, exact_mul_lut(8))
+
+
+def test_rel_power_of_exact_is_one(tiny_lib):
+    assert tiny_lib.entries["mul8u_exact"].rel_power == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------- low-rank
+def test_rank_profile_monotone():
+    lut = lut_from_netlist(families.bam_multiplier(8, 1, 4), 8)
+    prof = rank_profile(lut, 8)
+    maes = [p["mae"] for p in prof]
+    assert all(maes[i] >= maes[i + 1] - 1e-9 for i in range(len(maes) - 1))
+
+
+def test_structured_multipliers_are_low_rank():
+    """Truncation is exactly rank 1 (separable).  BAM error is a sum of
+    dropped rank-1 partial products a_i ⊗ b_j: BAM(1,3) drops rows {0}
+    and weights <3 whose union spans exactly 2 extra directions -> the
+    LUT is exactly rank 3 (measured)."""
+    tr = lut_from_netlist(families.truncated_multiplier(8, 3), 8)
+    assert rank_for_tolerance(tr, 1e-6) == 1
+    bam13 = lut_from_netlist(families.bam_multiplier(8, 1, 3), 8)
+    assert rank_for_tolerance(bam13, 1e-6) == 3
+    # BAM(0,4) drops 10 separate rank-1 cells: NOT exactly low-rank, but
+    # rank-4 already reduces decomposition MAE below 1 LSB.
+    bam04 = lut_from_netlist(families.bam_multiplier(8, 0, 4), 8)
+    prof = {p["rank"]: p["mae"] for p in
+            __import__("repro.core.luts", fromlist=["rank_profile"]
+                       ).rank_profile(bam04, 4)}
+    assert prof[4] < 1.0
+
+
+def test_decompose_reconstruction_error_bounded():
+    lut = exact_mul_lut(8)
+    fac = decompose_lut(lut, 1)
+    assert fac.mae_vs(lut) < 1e-6

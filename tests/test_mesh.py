@@ -1,0 +1,116 @@
+"""Sharding rules + shape specs (single-device: rules only, no mesh
+construction beyond 1-device meshes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, all_cells, get_config
+from repro.configs.shapes import SHAPES, batch_specs, shape_applicable
+
+
+class FakeMesh:
+    """Duck-typed mesh for rule testing without devices."""
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+from repro.launch.mesh import batch_pspec, cache_pspec, param_pspec
+
+
+SP = FakeMesh({"data": 16, "model": 16})
+MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_rules_embed():
+    # vocab divisible by 16 -> sharded on model
+    assert param_pspec("embed", (64000, 7168), SP) == P("model", ("data",))
+    # mamba vocab 50280 NOT divisible -> falls to d_model on model
+    spec = param_pspec("embed", (50280, 1536), SP)
+    assert spec == P(None, "model")
+
+
+def test_param_rules_proj():
+    assert param_pspec("blocks/mixer_0/wq", (60, 7168, 7168), SP) \
+        == P(None, ("data",), "model")
+    assert param_pspec("blocks/mixer_0/wo", (60, 7168, 7168), SP) \
+        == P(None, "model", ("data",))
+
+
+def test_param_rules_experts():
+    spec = param_pspec("blocks/ffn_0/wi", (60, 160, 5120, 1536), SP)
+    assert spec[1] == "model"      # EP on expert dim
+
+
+def test_param_rules_non_divisible_drops():
+    spec = param_pspec("blocks/mixer_0/wq", (2, 100, 37), SP)
+    assert spec == P(None, None, None)
+
+
+def test_param_rules_multipod_fsdp():
+    spec = param_pspec("blocks/ffn_0/wi", (60, 5120, 20480), MP)
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_batch_pspec():
+    assert batch_pspec("tokens", (256, 4096), SP) == P(("data",), None)
+    assert batch_pspec("tokens", (16, 16, 4096), SP, microbatched=True) \
+        == P(None, ("data",), None)
+    # batch=1 (long_500k): cannot shard
+    assert batch_pspec("token", (1,), SP) == P(None)
+
+
+def test_cache_pspec_decode():
+    # dense KV (G,B,T,Hkv,D): batch on data; kv heads 8 !| 16 -> seq
+    spec = cache_pspec("mixer_0/k", (60, 128, 32768, 8, 128), SP, False)
+    assert spec == P(None, ("data",), "model", None, None)
+    # long-context: sequence over (data, model)
+    spec = cache_pspec("mixer_4/k", (4, 1, 524288, 8, 128), SP, True)
+    assert spec == P(None, None, ("data", "model"), None, None)
+    # mamba state: heads on model
+    spec = cache_pspec("mixer_0/state", (48, 128, 48, 64, 128), SP, False)
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_all_cells_and_skips():
+    cells, skips = all_cells()
+    assert len(cells) + len(skips) == 40
+    assert len(skips) == 8            # 8 full-attention archs skip long_500k
+    skip_archs = {a for a, s, _ in skips}
+    assert "mamba2-780m" not in skip_archs
+    assert "jamba-v0.1-52b" not in skip_archs
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_batch_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for sname, spec in SHAPES.items():
+        if not shape_applicable(cfg, spec):
+            continue
+        specs = batch_specs(cfg, spec)
+        assert specs, (arch, sname)
+        for k, v in specs.items():
+            assert all(d > 0 for d in v.shape)
+
+
+def test_exact_assigned_configs():
+    """Spot-check the exact assigned numbers (guard against drift)."""
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) \
+        == (60, 5120, 128, 102400)
+    assert (c.n_experts, c.top_k, c.kv_lora) == (160, 6, 512)
+    c = get_config("nemotron-4-15b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab, c.act) \
+        == (32, 6144, 24576, 256000, "relu2")
+    c = get_config("yi-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) \
+        == (60, 7168, 56, 8, 20480)
+    c = get_config("whisper-large-v3")
+    assert (c.n_enc_layers, c.n_layers, c.d_model, c.vocab) \
+        == (32, 32, 1280, 51866)
+    c = get_config("jamba-v0.1-52b")
+    assert (c.attn_period, c.n_experts, c.top_k) == (8, 16, 2)
+    c = get_config("mamba2-780m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
