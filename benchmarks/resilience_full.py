@@ -1,11 +1,15 @@
 """Paper Table II: multiplier characterization x classification accuracy
 with the same approximate multiplier in every conv layer (trained
-ResNet-8 on synthetic CIFAR; evolved + truncation + BAM entries)."""
+ResNet-8 on synthetic CIFAR; evolved + truncation + BAM entries).
+Runs through the ``explore()`` DSE facade and reports the multiplier
+``select_multiplier`` would deploy for a 1-point accuracy budget."""
 from __future__ import annotations
 
 import time
 
-from repro.approx.resilience import all_layers_sweep
+from repro.approx.dse import explore, select_multiplier
+from repro.approx.layers import ApproxPolicy
+from repro.approx.specs import BackendSpec
 from repro.core.library import get_default_library
 from repro.models import resnet
 
@@ -18,15 +22,10 @@ def run(n_mult: int = 8) -> None:
     cfg, params = trained_resnet(8)
     eval_fn = make_eval_fn(cfg, params)
 
-    from repro.approx.layers import ApproxPolicy
-    from repro.approx.backend import MatmulBackend
     t0 = time.time()
-    acc_f32 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="f32")))
-    acc_int8 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="int8")))
-    us = (time.time() - t0) / 2 * 1e6
+    acc_f32 = eval_fn(ApproxPolicy(default=BackendSpec.exact("f32")))
+    us = (time.time() - t0) * 1e6
     emit("table_II/float", us, f"acc={acc_f32:.4f};power=1.0")
-    emit("table_II/8bit_exact_golden", us,
-         f"acc={acc_int8:.4f};power=1.0")
 
     sel = lib.case_study_selection(per_metric=10)
     names = [e.name for e in sel][:n_mult]
@@ -35,12 +34,19 @@ def run(n_mult: int = 8) -> None:
         if extra in lib.entries and extra not in names:
             names.append(extra)
     counts = resnet.layer_mult_counts(cfg)
-    rows = all_layers_sweep(eval_fn, counts, names, lib, mode="lut")
-    for r in sorted(rows, key=lambda r: -r.network_rel_power):
+    result = explore(eval_fn, counts, lib, multipliers=names, mode="lut",
+                     per_layer=False)
+    emit("table_II/8bit_exact_golden", us,
+         f"acc={result.baseline_accuracy:.4f};power=1.0")
+    for r in sorted(result.all_layers, key=lambda r: -r.network_rel_power):
         emit(f"table_II/{r.multiplier}", us,
              f"acc={r.accuracy:.4f};power={r.network_rel_power:.4f};"
              f"mae={r.errors['mae']:.3f};wce={r.errors['wce']:.0f};"
              f"er={r.errors['er']:.4f}")
+    pick = select_multiplier(result, max_accuracy_drop=0.01)
+    if pick is not None:
+        emit(f"table_II/selected/{pick.multiplier}", us,
+             f"acc={pick.accuracy:.4f};power={pick.network_rel_power:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,12 @@
 """Paper Fig. 4: accuracy drop vs power drop when approximate
 multipliers are inserted into ONE layer of ResNet-8 at a time; layers
 with a larger multiplier share should show proportionally larger
-impact."""
+impact.  Runs through the ``explore()`` DSE facade (cached sweeps)."""
 from __future__ import annotations
 
 import time
 
-from repro.approx.resilience import per_layer_sweep
+from repro.approx.dse import explore
 from repro.core.library import get_default_library
 from repro.models import resnet
 
@@ -23,7 +23,9 @@ def run(n_mult: int = 3) -> None:
     names = [sel[1].name, sel[len(sel) // 2].name, sel[-1].name][:n_mult]
     counts = resnet.layer_mult_counts(cfg)
     t0 = time.time()
-    rows = per_layer_sweep(eval_fn, counts, names, lib, mode="lut")
+    result = explore(eval_fn, counts, lib, multipliers=names, mode="lut",
+                     all_layers=False)
+    rows = result.per_layer
     us = (time.time() - t0) / max(len(rows), 1) * 1e6
     for r in rows:
         emit(f"fig_4/{r.layer}/{r.multiplier}", us,

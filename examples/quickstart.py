@@ -2,19 +2,20 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's flow end to end on one page:
+Walks the paper's flow end to end on one page with the spec-first API:
   1. load (or build) the approximate-circuit library,
   2. select case-study multipliers per the paper's Pareto rule,
-  3. run a matmul through the emulated approximate datapath and
-     compare against the exact int8 accelerator,
+  3. name datapaths as serializable ``BackendSpec``s, materialize them
+     against the library (cached), and run a matmul through the
+     emulated approximate datapath vs the exact int8 accelerator,
   4. show the TPU-native low-rank emulation agreeing with the bit-true
-     LUT emulation.
+     LUT emulation, and ship the chosen config as policy JSON.
 """
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.library import get_default_library
-from repro.approx.backend import MatmulBackend, backend_matmul
+from repro.approx import ApproxPolicy, BackendSpec, backend_matmul
 
 lib = get_default_library()
 print(f"library: {len(lib.entries)} circuits")
@@ -35,11 +36,16 @@ for e in sel[:12]:
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
 w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
-y_exact = backend_matmul(x, w, MatmulBackend(mode="int8"))
+y_exact = backend_matmul(x, w, BackendSpec.golden())
 
+# specs are names: frozen, hashable, JSON round-trippable — the arrays
+# only exist in the cached materialization, never in the spec itself
 mult = sel[min(3, len(sel) - 1)].name
-be_lut = MatmulBackend.from_library(mult, mode="lut", library=lib)
-be_lr = MatmulBackend.from_library(mult, mode="lowrank", library=lib)
+spec_lut = BackendSpec.from_library(mult, mode="lut")
+spec_lr = BackendSpec.from_library(mult, mode="lowrank")
+be_lut = spec_lut.materialize(lib)
+be_lr = spec_lr.materialize(lib)
+assert spec_lr.materialize(lib) is be_lr      # cached: one trace per spec
 y_lut = backend_matmul(x, w, be_lut)
 y_lr = backend_matmul(x, w, be_lr)
 
@@ -52,4 +58,12 @@ print(f"  |approx - exact| mean   = {err_vs_exact:.4f}  "
 print(f"  |lowrank - LUT| mean    = {err_emulation:.4f}  "
       f"(TPU emulation error — should be much smaller)")
 assert err_emulation < max(err_vs_exact, 1e-3) or err_vs_exact == 0
+
+# --- ship the chosen accelerator configuration ------------------------------
+policy = ApproxPolicy(default=BackendSpec.golden(),
+                      overrides=[("s*_conv*", spec_lr)])
+blob = policy.to_json()
+assert ApproxPolicy.from_json(blob).cache_key() == policy.cache_key()
+print(f"\npolicy JSON ({len(blob)} bytes) round-trips — ready for "
+      f"checkpoints and per-request serving")
 print("\nOK")

@@ -43,20 +43,26 @@ def main() -> None:
           f"{mult} (power {100 * entry.rel_power:.1f}%, "
           f"MAE {entry.errors.mae:.2f})")
 
+    # ONE engine; the accelerator is selected PER REQUEST by shipping a
+    # serialized ApproxPolicy in the ServeConfig (spec-first API) — the
+    # engine keeps a jitted step pair per distinct policy.
+    engine = Engine(cfg, params, train_policy(), library=lib)
     logits = {}
     for name, policy in [
         ("bf16 (float)", train_policy()),
         ("int8 exact (golden)", serve_policy(mult, "int8")),
         ("approx lowrank", serve_policy(mult, "lowrank")),
     ]:
-        engine = Engine(cfg, params, policy)
+        scfg = ServeConfig(max_new_tokens=args.max_new,
+                           policy=policy.to_json_dict())
         t0 = time.time()
-        out = engine.generate(prompts, ServeConfig(max_new_tokens=args.max_new))
+        out = engine.generate(prompts, scfg)
         dt = time.time() - t0
         import jax.numpy as jnp
         cache = fns.init_cache(cfg, args.batch, args.prompt_len + 1)
-        lg, _ = engine._prefill(params, {"tokens": jnp.asarray(prompts)},
-                                cache)
+        prefill, _ = engine._steps_for(
+            engine._request_policy(scfg))
+        lg, _ = prefill(params, {"tokens": jnp.asarray(prompts)}, cache)
         logits[name] = np.asarray(lg)
         print(f"  {name:<22} {args.batch * args.max_new / dt:>7.1f} tok/s "
               f"first tokens: {out[0][:6]}")

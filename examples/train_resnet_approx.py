@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.backend import MatmulBackend
-from repro.approx.resilience import all_layers_sweep, per_layer_sweep
+from repro.approx.dse import explore, select_multiplier
+from repro.approx.specs import BackendSpec
 from repro.core.library import get_default_library
 from repro.data.synthetic import CifarBatches
 from repro.models import resnet
@@ -74,12 +74,10 @@ def main() -> None:
         return float(np.mean(accs))
 
     from repro.approx.layers import ApproxPolicy
-    acc_f32 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="f32")))
-    acc_int8 = eval_fn(ApproxPolicy(default=MatmulBackend(mode="int8")))
-    print(f"[resnet] accuracy: float={100 * acc_f32:.2f}%  "
-          f"8-bit exact (golden)={100 * acc_int8:.2f}%")
+    acc_f32 = eval_fn(ApproxPolicy(default=BackendSpec.exact("f32")))
+    print(f"[resnet] accuracy: float={100 * acc_f32:.2f}%")
 
-    # --- resilience analysis -------------------------------------------
+    # --- resilience analysis through the DSE facade --------------------
     lib = get_default_library()
     sel = lib.case_study_selection(per_metric=10)
     mults = [e.name for e in sel]
@@ -88,21 +86,34 @@ def main() -> None:
     counts = resnet.layer_mult_counts(cfg)
 
     print(f"\n[Table II-style] all conv layers, {len(mults)} multipliers:")
-    rows = all_layers_sweep(eval_fn, counts, mults, lib, mode="lut")
+    result = explore(eval_fn, counts, lib, multipliers=mults, mode="lut",
+                     per_layer=False)
+    acc_int8 = result.baseline_accuracy
+    print(f"[resnet] 8-bit exact (golden) accuracy: {100 * acc_int8:.2f}%")
     print(f"{'multiplier':<20}{'power%':>8}{'MAE':>10}{'acc%':>8}")
     print(f"{'8-bit exact':<20}{100.0:>8.1f}{0.0:>10.2f}"
           f"{100 * acc_int8:>8.2f}")
+    rows = result.all_layers
     for r in sorted(rows, key=lambda r: -r.network_rel_power):
         print(f"{r.multiplier:<20}{100 * r.network_rel_power:>8.1f}"
               f"{r.errors['mae']:>10.2f}{100 * r.accuracy:>8.2f}")
 
+    pick = select_multiplier(result, max_accuracy_drop=0.01)
+    if pick is not None:
+        print(f"\n[autoAx-style selection] within a 1-point accuracy "
+              f"budget, deploy {pick.multiplier} "
+              f"(power {100 * pick.network_rel_power:.1f}%, "
+              f"acc {100 * pick.accuracy:.2f}%)")
+        print(f"  policy JSON: {pick.policy().to_json()}")
+
     print(f"\n[Fig. 4-style] per-layer sweep "
           f"(one layer approximated at a time):")
     worst = min(rows, key=lambda r: r.accuracy)
-    probe = [worst.multiplier]
-    layer_rows = per_layer_sweep(eval_fn, counts, probe, lib, mode="lut")
+    layer_result = explore(eval_fn, counts, lib,
+                           multipliers=[worst.multiplier], mode="lut",
+                           all_layers=False)
     print(f"{'layer':<18}{'mult share%':>12}{'acc%':>8}")
-    for r in sorted(layer_rows, key=lambda r: -r.mult_share):
+    for r in sorted(layer_result.per_layer, key=lambda r: -r.mult_share):
         print(f"{r.layer:<18}{100 * r.mult_share:>12.1f}"
               f"{100 * r.accuracy:>8.2f}")
     print("\n[resnet] claim check: the layer with the largest multiplier "

@@ -1,3 +1,10 @@
 from .quant import QuantParams, quantize, dequantize, calibrate
-from .backend import MatmulBackend, backend_matmul
-from .layers import ApproxPolicy
+from .registry import (Datapath, available_datapaths, get_datapath,
+                       register_datapath)
+from .specs import (BackendSpec, MaterializedBackend, canonicalize,
+                    materialize, materialize_cache_stats,
+                    clear_materialize_cache)
+from .backend import MatmulBackend, as_backend, backend_matmul
+from .layers import ApproxPolicy, spec_of
+from .dse import (DesignPoint, ExploreResult, explore, pareto_points,
+                  select_multiplier)

@@ -1,7 +1,7 @@
 """Matmul backends: the accelerator datapath being emulated.
 
 Every projection matmul in every model flows through ``backend_matmul``.
-Modes:
+Modes (each a registered datapath, see ``repro.approx.registry``):
 
   * ``f32`` / ``bf16`` — exact float (the paper's pre-quantization net)
   * ``int8``           — exact uint8-quantized datapath (the paper's
@@ -11,6 +11,13 @@ Modes:
   * ``lowrank``        — approximate multiplier, rank-R factored LUT:
                          R 256-entry table lookups + R MXU matmuls
                          (TPU-native adaptation, DESIGN.md §4.2)
+
+The preferred handle is a ``repro.approx.specs.BackendSpec`` (or the
+``MaterializedBackend`` it caches to); the legacy ndarray-carrying
+``MatmulBackend`` remains as a deprecation shim and is converted on
+entry.  Datapath selection goes through the registry — there is no
+mode if/elif chain here, so new datapaths plug in without editing this
+module (DESIGN.md §2).
 
 Gradients: straight-through estimator — backward pass is the exact f32
 matmul VJP, enabling beyond-paper approximate-aware training (the paper
@@ -22,19 +29,25 @@ K < 2^31 / 255^2 = 33 030, which covers every assigned architecture
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import warnings
+from dataclasses import dataclass
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .quant import QuantParams, calibrate, quantize
+from .registry import MAX_LUT_K, get_datapath
+from .specs import BackendSpec, MaterializedBackend, materialize
 
-MAX_LUT_K = 33030
 
-
+# ----------------------------------------------------------------------
+# Legacy shim (pre-spec API): id-hashed dataclass carrying raw arrays.
+# Prefer BackendSpec everywhere new; this stays so existing call sites
+# and tests keep working unchanged.
+# ----------------------------------------------------------------------
 @dataclass(frozen=True, eq=False)  # eq=False: id-hash (ndarray fields)
 class MatmulBackend:
     mode: str = "bf16"                       # f32|bf16|int8|lut|lowrank
@@ -59,103 +72,98 @@ class MatmulBackend:
         library=None,
         use_pallas: bool = False,
     ) -> "MatmulBackend":
-        """Build a backend emulating library multiplier ``name``."""
+        """Deprecated: use ``BackendSpec.from_library(...).materialize()``.
+        Builds a legacy backend emulating library multiplier ``name``."""
+        warnings.warn(
+            "MatmulBackend.from_library is deprecated; use "
+            "BackendSpec.from_library(name, ...).materialize(library)",
+            DeprecationWarning, stacklevel=2)
         from repro.core.library import get_default_library
-        from repro.core.luts import decompose_lut, rank_for_tolerance
+        from .registry import pack_lowrank, pack_lut
         lib = library if library is not None else get_default_library()
-        lut = np.asarray(lib.lut(name), dtype=np.int32)
-        if rank is None:
-            # pick R so decomposition error is negligible next to the
-            # circuit's own error (floor 0.25 LSB^2 for near-exact circuits)
-            mult_mae = max(lib.entries[name].errors.mae, 0.0)
-            tol = max(0.25, 0.1 * mult_mae)
-            rank = rank_for_tolerance(lut, tol, max_rank=16)
-        fac = decompose_lut(lut, rank)
+        spec = BackendSpec(mode=mode, multiplier=name, rank=rank,
+                           variant="pallas" if use_pallas else "ref")
+        lut = pack_lut(spec, lib)["lut"]
+        lr = pack_lowrank(spec, lib)     # shares the auto-rank heuristic
         return MatmulBackend(
             mode=mode, multiplier=name, lut=lut,
-            factors_u=np.asarray(fac.u), factors_v=np.asarray(fac.v),
-            rank=int(rank), use_pallas=use_pallas,
+            factors_u=lr["u"], factors_v=lr["v"],
+            rank=int(lr["u"].shape[0]), use_pallas=use_pallas,
         )
 
+    def to_spec(self) -> BackendSpec:
+        """Best-effort serializable spec: faithful whenever the arrays
+        came from a library (every non-test call site); the single
+        source of truth for the legacy-field -> spec mapping."""
+        return BackendSpec(
+            mode=self.mode, multiplier=self.multiplier,
+            rank=(int(self.rank) or None), block_m=self.block_m,
+            ste=self.ste,
+            variant="pallas" if self.use_pallas else "ref")
+
+
+BackendLike = Union[None, BackendSpec, MaterializedBackend, MatmulBackend]
+
+
+def as_backend(backend: BackendLike) -> MaterializedBackend:
+    """Coerce any accepted backend handle to a MaterializedBackend."""
+    if backend is None:
+        return materialize(BackendSpec())
+    if isinstance(backend, MaterializedBackend):
+        return backend
+    if isinstance(backend, BackendSpec):
+        return materialize(backend)
+    if isinstance(backend, MatmulBackend):
+        return _from_legacy(backend)
+    raise TypeError(f"not a backend: {type(backend).__name__}")
+
+
+def _from_legacy(be: MatmulBackend) -> MaterializedBackend:
+    spec = be.to_spec()
+    if not spec.is_quantized:
+        return materialize(spec)
+    dp = get_datapath(spec.datapath_name)
+    if not dp.needs_library:                 # int8: no consts to carry
+        return materialize(spec)
+    # Raw arrays were attached by hand — wrap them uncached (id-hash
+    # semantics identical to the legacy class).
+    consts: dict = {}
+    if be.mode.startswith("lut"):
+        if be.lut is None:
+            raise ValueError("legacy lut backend without a LUT")
+        consts = {"lut": np.asarray(be.lut, np.int32),
+                  "block_m": int(be.block_m)}
+    elif be.mode.startswith("lowrank"):
+        if be.factors_u is None or be.factors_v is None:
+            raise ValueError("legacy lowrank backend without factors")
+        consts = {"u": np.asarray(be.factors_u, np.float32),
+                  "v": np.asarray(be.factors_v, np.float32)}
+    else:
+        raise ValueError(f"legacy backend mode {be.mode!r} needs a spec")
+    return MaterializedBackend(spec=spec, datapath=dp, consts=consts)
+
 
 # ----------------------------------------------------------------------
-# Quantized kernels (operate on uint8 codes stored as int32)
+# Quantized execution (operates on uint8 codes stored as int32)
 # ----------------------------------------------------------------------
-def _int8_exact_q(qa: jax.Array, qw: jax.Array, za, zw) -> jax.Array:
-    """Exact Σ (qa-za)(qw-zw) with int32 accumulation."""
-    acc = jax.lax.dot_general(
-        qa, qw, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
-    k = qa.shape[1]
-    row = jnp.sum(qa, axis=1, dtype=jnp.int32)        # (M,)
-    col = jnp.sum(qw, axis=0, dtype=jnp.int32)        # (N,)
-    return acc - zw * row[:, None] - za * col[None, :] + k * za * zw
-
-
-def _lut_gather_block(qa_blk: jax.Array, qw: jax.Array, flat_lut: jax.Array
-                      ) -> jax.Array:
-    """Σ_k LUT[qa, qw] for one row block. (mb,K) x (K,N) -> (mb,N) i32."""
-    idx = qa_blk[:, :, None] * 256 + qw[None, :, :]        # (mb,K,N)
-    prods = jnp.take(flat_lut, idx, axis=0)                 # (mb,K,N) i32
-    return jnp.sum(prods, axis=1, dtype=jnp.int32)
-
-
-def _lut_matmul_q(qa: jax.Array, qw: jax.Array, flat_lut: jax.Array,
-                  block_m: int) -> jax.Array:
-    """Blocked bit-true LUT matmul on codes. (M,K) x (K,N) -> (M,N) i32."""
-    m, k = qa.shape
-    if k > MAX_LUT_K:
-        raise ValueError(f"K={k} exceeds int32-safe LUT accumulation bound")
-    mb = min(block_m, m)
-    pad = (-m) % mb
-    qa_p = jnp.pad(qa, ((0, pad), (0, 0)))
-    blocks = qa_p.reshape(-1, mb, k)
-    out = jax.lax.map(
-        lambda blk: _lut_gather_block(blk, qw, flat_lut), blocks)
-    return out.reshape(-1, out.shape[-1])[:m]
-
-
-def _lowrank_matmul_q(qa: jax.Array, qw: jax.Array, u: jax.Array,
-                      v: jax.Array) -> jax.Array:
-    """Σ_k Σ_r U[r,qa]V[r,qw]  ==  Σ_r tableU_r(qa) @ tableV_r(qw).
-    (M,K) x (K,N) -> (M,N) f32; R batched MXU matmuls."""
-    ua = jnp.take(u, qa, axis=1)   # (R,M,K) f32
-    vw = jnp.take(v, qw, axis=1)   # (R,K,N) f32
-    return jnp.einsum("rmk,rkn->mn", ua, vw,
-                      preferred_element_type=jnp.float32)
-
-
-def _approx_sum_q(qa, qw, backend: MatmulBackend) -> jax.Array:
-    """Σ_k approx_mul(qa, qw) on raw codes, by emulation mode."""
-    if backend.mode == "lut":
-        if backend.use_pallas:
-            from repro.kernels.ops import approx_matmul_lut
-            return approx_matmul_lut(qa, qw, jnp.asarray(backend.lut))
-        flat = jnp.asarray(backend.lut, dtype=jnp.int32).reshape(-1)
-        return _lut_matmul_q(qa, qw, flat, backend.block_m)
-    if backend.mode == "lowrank":
-        if backend.use_pallas:
-            from repro.kernels.ops import lowrank_matmul
-            return lowrank_matmul(qa, qw, jnp.asarray(backend.factors_u),
-                                  jnp.asarray(backend.factors_v))
-        return _lowrank_matmul_q(qa, qw, jnp.asarray(backend.factors_u),
-                                 jnp.asarray(backend.factors_v))
-    raise ValueError(backend.mode)
-
-
 def _quantized_matmul(x2d: jax.Array, w: jax.Array,
-                      backend: MatmulBackend) -> jax.Array:
+                      backend: MaterializedBackend) -> jax.Array:
     qp_a = calibrate(x2d)
     qp_w = calibrate(w)
     qa = quantize(x2d, qp_a)
     qw = quantize(w, qp_w)
     za, zw = qp_a.zero_point, qp_w.zero_point
     k = x2d.shape[1]
-    if backend.mode == "int8":
-        acc = _int8_exact_q(qa, qw, za, zw).astype(jnp.float32)
+    dp = backend.datapath
+    s = dp.forward_q(qa, qw, backend.consts)
+    if dp.exact_int32:
+        # exact datapath: Σ (qa-za)(qw-zw) with int32 accumulation
+        row = jnp.sum(qa, axis=1, dtype=jnp.int32)        # (M,)
+        col = jnp.sum(qw, axis=0, dtype=jnp.int32)        # (N,)
+        acc = (s - zw * row[:, None] - za * col[None, :]
+               + k * za * zw).astype(jnp.float32)
     else:
-        s = _approx_sum_q(qa, qw, backend).astype(jnp.float32)
+        s = s.astype(jnp.float32)
         row = jnp.sum(qa, axis=1, dtype=jnp.int32).astype(jnp.float32)
         col = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
         zaf, zwf = za.astype(jnp.float32), zw.astype(jnp.float32)
@@ -166,8 +174,8 @@ def _quantized_matmul(x2d: jax.Array, w: jax.Array,
 # ----------------------------------------------------------------------
 # Public entry point with STE gradients
 # ----------------------------------------------------------------------
-def _forward_2d(x2d: jax.Array, w: jax.Array, backend: MatmulBackend
-                ) -> jax.Array:
+def _forward_2d(x2d: jax.Array, w: jax.Array,
+                backend: MaterializedBackend) -> jax.Array:
     if backend.mode == "f32":
         return jnp.dot(x2d, w, preferred_element_type=jnp.float32)
     if backend.mode == "bf16":
@@ -205,11 +213,12 @@ _ste_matmul.defvjp(_ste_fwd, _ste_bwd)
 # projection weight leaf with {tabs: (R,K,N) bf16, colsum, scales},
 # turning per-step work into R plain matmuls — no weight requantization,
 # no f32 table gather, 2 bytes/element instead of 4.
-def prepare_weight(w, backend: MatmulBackend) -> dict:
+def prepare_weight(w, backend: BackendLike) -> dict:
+    mb = as_backend(backend)
     w = jnp.asarray(w, jnp.float32)
     qp_w = calibrate(w)
     qw = quantize(w, qp_w)
-    v = jnp.asarray(backend.factors_v)            # (R,256)
+    v = jnp.asarray(mb.consts["v"])               # (R,256)
     tabs = jnp.take(v, qw, axis=1).astype(jnp.bfloat16)   # (R,K,N)
     colsum = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
     return {
@@ -225,10 +234,10 @@ def is_prepared(w) -> bool:
 
 
 def _prepared_matmul(x2d: jax.Array, pw: dict,
-                     backend: MatmulBackend) -> jax.Array:
+                     backend: MaterializedBackend) -> jax.Array:
     qp_a = calibrate(x2d)
     qa = quantize(x2d, qp_a)
-    u = jnp.asarray(backend.factors_u)            # (R,256)
+    u = jnp.asarray(backend.consts["u"])          # (R,256)
     ua = jnp.take(u, qa, axis=1).astype(jnp.bfloat16)     # (R,M,K)
     y_q = jax.lax.dot_general(
         ua, pw["tabs"], (((2,), (1,)), ((0,), (0,))),
@@ -247,15 +256,17 @@ _PROJECTION_LEAVES = frozenset({
 })
 
 
-def prepare_tree(params, backend: MatmulBackend):
+def prepare_tree(params, backend: BackendLike):
     """Pre-pack every projection weight in a param pytree for lowrank
     serving (DESIGN.md §4.2, §Perf).  Handles stacked leading dims
     (scan groups, experts) by vmapping ``prepare_weight``."""
+    mb = as_backend(backend)
+
     def pack(v):
         fn = prepare_weight
         for _ in range(v.ndim - 2):
             fn = jax.vmap(fn, in_axes=(0, None))
-        return fn(v, backend)
+        return fn(v, mb)
 
     def walk(node):
         if isinstance(node, dict):
@@ -272,19 +283,21 @@ def prepare_tree(params, backend: MatmulBackend):
     return walk(params)
 
 
-def backend_matmul(x: jax.Array, w, backend: Optional[MatmulBackend] = None
+def backend_matmul(x: jax.Array, w, backend: BackendLike = None
                    ) -> jax.Array:
     """x: (..., K) @ w: (K, N) -> (..., N) f32 through the selected
-    accelerator datapath.  ``w`` may be a prepared-weight dict."""
-    backend = backend or MatmulBackend()
+    accelerator datapath.  ``backend`` may be a BackendSpec, a
+    MaterializedBackend, a legacy MatmulBackend or None (bf16);
+    ``w`` may be a prepared-weight dict."""
+    mb = as_backend(backend)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2d = x.reshape(-1, k)
     if is_prepared(w):
-        y = _prepared_matmul(x2d.astype(jnp.float32), w, backend)
+        y = _prepared_matmul(x2d.astype(jnp.float32), w, mb)
         return y.reshape(*lead, y.shape[-1])
-    if backend.mode in ("f32", "bf16") or not backend.ste:
-        y = _forward_2d(x2d, w, backend)
+    if not mb.spec.is_quantized or not mb.ste:
+        y = _forward_2d(x2d, w, mb)
     else:
-        y = _ste_matmul(x2d, w, backend)
+        y = _ste_matmul(x2d, w, mb)
     return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,180 @@
+"""autoAx-style design-space exploration facade (DESIGN.md §2.3).
+
+The paper's workflow — library → Pareto selection → per-layer resilience
+sweep → pick the multiplier for the application — as one call, in the
+spirit of autoAx (Mrazek et al., 2019: automated search of approximate
+circuits for a quality bound):
+
+    result = explore(eval_fn, layer_counts, library,
+                     quality_bound=0.01)
+    point = select_multiplier(result, max_accuracy_drop=0.01)
+    policy = point.policy()          # ship it: policy.to_json()
+
+``explore`` runs the per-layer (Fig. 4) and all-layers (Table II)
+sweeps on top of ``repro.approx.resilience`` with a policy-keyed eval
+cache, so repeated explorations (and the shared exact baseline) never
+re-evaluate the same configuration; backend materialization is cached
+per (library, spec) so sweeps share jit traces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .layers import ApproxPolicy
+from .resilience import ResilienceRow, all_layers_sweep, per_layer_sweep
+from .specs import BackendSpec
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One evaluated configuration of the design space."""
+    multiplier: str
+    layer: str                  # layer name, or "all"
+    accuracy: float
+    network_rel_power: float
+    multiplier_rel_power: float
+    mult_share: float
+    spec: Optional[BackendSpec] = None
+    errors: dict = field(default_factory=dict)
+
+    @staticmethod
+    def from_row(r: ResilienceRow) -> "DesignPoint":
+        return DesignPoint(
+            multiplier=r.multiplier, layer=r.layer, accuracy=r.accuracy,
+            network_rel_power=r.network_rel_power,
+            multiplier_rel_power=r.multiplier_rel_power,
+            mult_share=r.mult_share, spec=r.spec, errors=dict(r.errors))
+
+    def policy(self, base: Optional[BackendSpec] = None) -> ApproxPolicy:
+        """Deployable policy for this point: the multiplier everywhere
+        ("all"), or only in the swept layer over an exact base."""
+        spec = self.spec or BackendSpec(mode="lut",
+                                        multiplier=self.multiplier)
+        if self.layer == "all":
+            return ApproxPolicy(default=spec)
+        return ApproxPolicy(default=base or BackendSpec.golden(),
+                            overrides=[(self.layer, spec)])
+
+    def to_dict(self) -> dict:
+        return {
+            "multiplier": self.multiplier, "layer": self.layer,
+            "accuracy": self.accuracy,
+            "network_rel_power": self.network_rel_power,
+            "multiplier_rel_power": self.multiplier_rel_power,
+            "mult_share": self.mult_share,
+            "spec": self.spec.to_dict() if self.spec else None,
+            "errors": dict(self.errors),
+        }
+
+
+def pareto_points(points: list[DesignPoint]) -> list[DesignPoint]:
+    """Non-dominated on (accuracy max, network power min), by power.
+    Ties on both axes are mutually non-dominating and all kept,
+    matching ``ApproxLibrary.pareto_front`` semantics."""
+    pts = sorted(points, key=lambda p: (p.network_rel_power, -p.accuracy))
+    front: list[DesignPoint] = []
+    best_acc = float("-inf")
+    i = 0
+    while i < len(pts):
+        j = i
+        power = pts[i].network_rel_power
+        while j < len(pts) and pts[j].network_rel_power == power:
+            j += 1
+        acc_max = pts[i].accuracy
+        if acc_max > best_acc:
+            front.extend(p for p in pts[i:j] if p.accuracy == acc_max)
+            best_acc = acc_max
+        i = j
+    return front
+
+
+@dataclass
+class ExploreResult:
+    baseline_accuracy: float            # exact int8 golden datapath
+    all_layers: list[DesignPoint] = field(default_factory=list)
+    per_layer: list[DesignPoint] = field(default_factory=list)
+    selected: Optional[DesignPoint] = None
+
+    def pareto(self) -> list[DesignPoint]:
+        return pareto_points(self.all_layers)
+
+    def within(self, max_accuracy_drop: float) -> list[DesignPoint]:
+        floor = self.baseline_accuracy - max_accuracy_drop
+        return [p for p in self.all_layers if p.accuracy >= floor]
+
+    def to_json_dict(self) -> dict:
+        return {
+            "baseline_accuracy": self.baseline_accuracy,
+            "all_layers": [p.to_dict() for p in self.all_layers],
+            "per_layer": [p.to_dict() for p in self.per_layer],
+            "selected": self.selected.to_dict() if self.selected else None,
+        }
+
+
+def _cached_eval(eval_fn: Callable[[ApproxPolicy], float],
+                 cache: dict) -> Callable[[ApproxPolicy], float]:
+    def run(policy: ApproxPolicy) -> float:
+        key = policy.cache_key()
+        if key not in cache:
+            cache[key] = float(eval_fn(policy))
+        return cache[key]
+    return run
+
+
+def explore(
+    eval_fn: Callable[[ApproxPolicy], float],
+    layer_counts: dict[str, int],
+    library=None,
+    multipliers: Optional[list[str]] = None,
+    mode: str = "lut",
+    variant: str = "ref",
+    quality_bound: Optional[float] = None,
+    per_layer: bool = True,
+    all_layers: bool = True,
+    cache: Optional[dict] = None,
+) -> ExploreResult:
+    """One-call DSE: baseline + Table II + Fig. 4 sweeps over the
+    library's case-study multipliers (or ``multipliers``), with cached
+    evaluations.  Pass the same ``cache`` dict across calls to resume or
+    widen an exploration without re-running finished points.  If
+    ``quality_bound`` is given, ``result.selected`` is the lowest-power
+    all-layers point within that accuracy drop."""
+    if library is None:
+        from repro.core.library import get_default_library
+        library = get_default_library()
+    if multipliers is None:
+        multipliers = [e.name for e in library.case_study_selection()]
+    cache = cache if cache is not None else {}
+    run = _cached_eval(eval_fn, cache)
+
+    golden = BackendSpec.golden().materialize()
+    baseline = run(ApproxPolicy(default=golden))
+
+    result = ExploreResult(baseline_accuracy=baseline)
+    if all_layers:
+        rows = all_layers_sweep(run, layer_counts, multipliers, library,
+                                mode=mode, variant=variant)
+        result.all_layers = [DesignPoint.from_row(r) for r in rows]
+    if per_layer:
+        rows = per_layer_sweep(run, layer_counts, multipliers, library,
+                               mode=mode, base=golden, variant=variant)
+        result.per_layer = [DesignPoint.from_row(r) for r in rows]
+    if quality_bound is not None and result.all_layers:
+        result.selected = select_multiplier(result, quality_bound)
+    return result
+
+
+def select_multiplier(result: ExploreResult,
+                      max_accuracy_drop: float,
+                      baseline: Optional[float] = None
+                      ) -> Optional[DesignPoint]:
+    """The paper's endpoint: the lowest-power circuit whose all-layers
+    accuracy stays within ``max_accuracy_drop`` of the golden int8
+    baseline.  Returns None when no candidate meets the bound."""
+    floor = (baseline if baseline is not None
+             else result.baseline_accuracy) - max_accuracy_drop
+    ok = [p for p in result.all_layers if p.accuracy >= floor]
+    if not ok:
+        return None
+    return min(ok, key=lambda p: (p.network_rel_power, -p.accuracy))

@@ -1,32 +1,55 @@
 """Layer-level integration: injection policy + approx dense/conv.
 
-``ApproxPolicy`` maps layer names to ``MatmulBackend``s — the unit of
+``ApproxPolicy`` maps layer-name glob patterns to backends — the unit of
 the paper's resilience analysis ("only one layer was modified and one
 type of approximate multiplier was used in each experiment").  Models
 route every projection through ``policy.matmul(name, x, w)`` and report
 their multiplication counts per layer for the power model.
+
+Policy entries may be ``BackendSpec``s (serializable names of a
+configuration), the ``MaterializedBackend``s they cache to, or legacy
+``MatmulBackend``s.  ``to_json``/``from_json`` round-trip the policy as
+specs, so a chosen accelerator configuration ships inside checkpoints
+and serve requests (DESIGN.md §2.2); ``materialize`` binds every entry
+to a library once so jitted evals share traces.
 """
 from __future__ import annotations
 
 import fnmatch
-import re
+import json
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from .backend import MatmulBackend, backend_matmul
+from .backend import BackendLike, MatmulBackend, as_backend, backend_matmul
+from .specs import BackendSpec, MaterializedBackend, canonicalize
+
+
+def spec_of(backend: BackendLike) -> BackendSpec:
+    """Best-effort serializable spec for any backend handle (legacy
+    backends describe themselves via ``MatmulBackend.to_spec``)."""
+    if backend is None:
+        return BackendSpec()
+    if isinstance(backend, BackendSpec):
+        return backend
+    if isinstance(backend, MaterializedBackend):
+        return backend.spec
+    if isinstance(backend, MatmulBackend):
+        return backend.to_spec()
+    raise TypeError(f"not a backend: {type(backend).__name__}")
 
 
 @dataclass
 class ApproxPolicy:
     """default backend + per-layer-pattern overrides (fnmatch globs,
     first match wins)."""
-    default: MatmulBackend = field(default_factory=MatmulBackend)
-    overrides: list[tuple[str, MatmulBackend]] = field(default_factory=list)
+    default: BackendLike = field(default_factory=MatmulBackend)
+    overrides: list[tuple[str, BackendLike]] = field(default_factory=list)
 
-    def backend_for(self, name: str) -> MatmulBackend:
+    def backend_for(self, name: str) -> BackendLike:
         for pat, be in self.overrides:
             if fnmatch.fnmatch(name, pat):
                 return be
@@ -35,10 +58,80 @@ class ApproxPolicy:
     def matmul(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
         return backend_matmul(x, w, self.backend_for(name))
 
-    def with_override(self, pattern: str, backend: MatmulBackend
+    def with_override(self, pattern: str, backend: BackendLike
                       ) -> "ApproxPolicy":
         return ApproxPolicy(default=self.default,
                             overrides=[(pattern, backend)] + list(self.overrides))
+
+    # -- spec-first API -------------------------------------------------
+    def materialize(self, library=None) -> "ApproxPolicy":
+        """Bind every entry to ``library`` via the materialization cache
+        so repeated evals of equal policies share backend objects (and
+        therefore jit traces)."""
+        def mat(be: BackendLike) -> MaterializedBackend:
+            if isinstance(be, MaterializedBackend):
+                return be
+            if isinstance(be, MatmulBackend):
+                # preserve hand-attached arrays instead of rebuilding
+                # by multiplier name from the library
+                return as_backend(be)
+            return spec_of(be).materialize(library)
+        return ApproxPolicy(
+            default=mat(self.default),
+            overrides=[(p, mat(be)) for p, be in self.overrides])
+
+    def cache_key(self) -> tuple:
+        """Hashable identity of this policy.  Spec-level (canonicalized
+        per datapath) for spec/canonical entries; backends carrying
+        hand-attached arrays (which a spec cannot describe) are salted
+        with the backend object itself — id-hashed AND kept alive by
+        the key, so a recycled id can never alias a stale cache hit."""
+        def key_of(be: BackendLike):
+            spec = canonicalize(spec_of(be))
+            if isinstance(be, MaterializedBackend) and not be.canonical:
+                return (spec, be)
+            if isinstance(be, MatmulBackend) and (
+                    be.lut is not None or be.factors_u is not None):
+                return (spec, be)
+            return spec
+        return (key_of(self.default),
+                tuple((p, key_of(be)) for p, be in self.overrides))
+
+    # -- serialization --------------------------------------------------
+    def to_json_dict(self) -> dict:
+        def ser(be: BackendLike) -> dict:
+            unfaithful = (
+                (isinstance(be, MaterializedBackend) and not be.canonical)
+                or (isinstance(be, MatmulBackend) and (
+                    be.lut is not None or be.factors_u is not None)))
+            if unfaithful:
+                warnings.warn(
+                    "serializing a backend with hand-attached arrays by "
+                    "its spec; the arrays themselves are not captured — "
+                    "deserialization rebuilds from the library by "
+                    f"multiplier name ({spec_of(be).multiplier!r})",
+                    UserWarning, stacklevel=3)
+            return spec_of(be).to_dict()
+        return {
+            "default": ser(self.default),
+            "overrides": [[p, ser(be)] for p, be in self.overrides],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "ApproxPolicy":
+        return ApproxPolicy(
+            default=BackendSpec.from_dict(d["default"]),
+            overrides=[(p, BackendSpec.from_dict(s))
+                       for p, s in d.get("overrides", [])])
+
+    @staticmethod
+    def from_json(s: Union[str, dict]) -> "ApproxPolicy":
+        if isinstance(s, str):
+            s = json.loads(s)
+        return ApproxPolicy.from_json_dict(s)
 
 
 EXACT_POLICY = ApproxPolicy(default=MatmulBackend(mode="f32"))
@@ -76,11 +169,26 @@ def conv2d(policy: ApproxPolicy, name: str, x: jax.Array, w: jax.Array,
     return y
 
 
-def conv_mult_count(x_shape, w_shape, stride: int = 1) -> int:
-    """Number of scalar multiplications in this conv (power model)."""
+def conv_output_size(size: int, kernel: int, stride: int,
+                     padding: str) -> int:
+    """Spatial output size matching ``jax.lax`` conv semantics."""
+    if padding == "SAME":
+        return -(-size // stride)                 # ceil(size / stride)
+    if padding == "VALID":
+        if size < kernel:
+            return 0
+        return (size - kernel) // stride + 1
+    raise ValueError(f"unsupported padding {padding!r}")
+
+
+def conv_mult_count(x_shape, w_shape, stride: int = 1,
+                    padding: str = "SAME") -> int:
+    """Number of scalar multiplications in this conv (power model),
+    for the output dims ``conv2d`` actually produces."""
     bsz, h, w_, cin = x_shape
     kh, kw, _, cout = w_shape
-    ho, wo = h // stride, w_ // stride
+    ho = conv_output_size(h, kh, stride, padding)
+    wo = conv_output_size(w_, kw, stride, padding)
     return bsz * ho * wo * kh * kw * cin * cout
 
 

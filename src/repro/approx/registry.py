@@ -1,0 +1,181 @@
+"""Pluggable datapath registry (DESIGN.md §2.1).
+
+A *datapath* is the arithmetic core of the accelerator being emulated:
+given uint8 operand codes it returns the raw accumulated products
+``Σ_k mul(qa[m,k], qw[k,n])``.  Zero-point correction, scaling and the
+straight-through gradient wrapper live in ``repro.approx.backend`` and
+are shared by every datapath, so registering a new datapath is the ONLY
+step needed to plug a new emulation strategy (Booth/stochastic circuits,
+per-layer rank schedules, ...) into every model, sweep and serve path.
+
+Built-in datapaths registered here:
+
+  * ``int8``    — exact uint8 datapath (the paper's golden reference);
+                  int32-exact correction arithmetic
+  * ``lut``     — bit-true 256x256 LUT emulation (TFApprox port)
+  * ``lowrank`` — rank-R factored LUT: R table lookups + R MXU matmuls
+
+Pallas variants (``lut_pallas``, ``lowrank_pallas``) are registered by
+``repro.kernels.datapaths`` and resolved lazily on first lookup, so the
+core package never imports the kernel layer eagerly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_LUT_K = 33030  # int32-safe accumulation bound: 2^31 / 255^2
+
+
+class Datapath:
+    """Protocol/base class for registered datapaths.
+
+    ``pack(spec, library)`` runs once per (spec, library) on the host and
+    returns the device-constant dict consumed by ``forward_q``; the
+    result is cached by ``repro.approx.specs.materialize``.
+    ``exact_int32`` datapaths return int32 sums whose zero-point
+    correction must stay in int32 (bit-exact); the rest are corrected in
+    float32.  ``needs_library`` controls whether materialization binds
+    the consts to a specific ``ApproxLibrary``.
+    """
+
+    name: str = "?"
+    exact_int32: bool = False
+    needs_library: bool = True
+    # spec fields this datapath actually reads in pack()/forward_q();
+    # fields outside this set are canonicalized away in cache keys so
+    # equivalent configurations share one materialization + jit trace.
+    spec_fields: tuple = ("multiplier", "rank", "block_m")
+
+    def pack(self, spec, library) -> dict:
+        return {}
+
+    def forward_q(self, qa: jax.Array, qw: jax.Array, consts: dict
+                  ) -> jax.Array:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Datapath] = {}
+
+
+def register_datapath(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register under ``name``."""
+    def deco(cls: type) -> type:
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+    return deco
+
+
+def get_datapath(name: str) -> Datapath:
+    if name not in _REGISTRY and name.endswith("_pallas"):
+        # Pallas variants live in the kernel layer; import on demand.
+        import repro.kernels.datapaths  # noqa: F401  (registers on import)
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown datapath {name!r}; available: "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_datapaths() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ----------------------------------------------------------------------
+# Shared pack helpers
+# ----------------------------------------------------------------------
+def _resolve_rank(spec, library, lut: np.ndarray) -> int:
+    """spec.rank, or the smallest R whose decomposition error is
+    negligible next to the circuit's own error (floor 0.25 LSB^2)."""
+    from repro.core.luts import rank_for_tolerance
+    if spec.rank:
+        return int(spec.rank)
+    mult_mae = max(library.entries[spec.multiplier].errors.mae, 0.0)
+    tol = max(0.25, 0.1 * mult_mae)
+    return int(rank_for_tolerance(lut, tol, max_rank=16))
+
+
+def pack_lut(spec, library) -> dict:
+    lut = np.asarray(library.lut(spec.multiplier), dtype=np.int32)
+    return {"lut": lut, "block_m": int(spec.block_m)}
+
+
+def pack_lowrank(spec, library) -> dict:
+    from repro.core.luts import decompose_lut
+    lut = np.asarray(library.lut(spec.multiplier), dtype=np.int32)
+    fac = decompose_lut(lut, _resolve_rank(spec, library, lut))
+    return {"u": np.asarray(fac.u), "v": np.asarray(fac.v)}
+
+
+# ----------------------------------------------------------------------
+# Built-in datapaths
+# ----------------------------------------------------------------------
+@register_datapath("int8")
+class Int8Datapath(Datapath):
+    """Exact Σ qa·qw with int32 accumulation (golden 8-bit datapath)."""
+
+    exact_int32 = True
+    needs_library = False
+    spec_fields = ()
+
+    def forward_q(self, qa, qw, consts):
+        return jax.lax.dot_general(
+            qa, qw, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+
+def _lut_gather_block(qa_blk: jax.Array, qw: jax.Array, flat_lut: jax.Array
+                      ) -> jax.Array:
+    """Σ_k LUT[qa, qw] for one row block. (mb,K) x (K,N) -> (mb,N) i32."""
+    idx = qa_blk[:, :, None] * 256 + qw[None, :, :]        # (mb,K,N)
+    prods = jnp.take(flat_lut, idx, axis=0)                 # (mb,K,N) i32
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+@register_datapath("lut")
+class LutDatapath(Datapath):
+    """Blocked bit-true LUT matmul on codes. (M,K) x (K,N) -> (M,N) i32."""
+
+    spec_fields = ("multiplier", "block_m")
+
+    def pack(self, spec, library) -> dict:
+        return pack_lut(spec, library)
+
+    def forward_q(self, qa, qw, consts):
+        m, k = qa.shape
+        if k > MAX_LUT_K:
+            raise ValueError(
+                f"K={k} exceeds int32-safe LUT accumulation bound")
+        flat = jnp.asarray(consts["lut"], dtype=jnp.int32).reshape(-1)
+        mb = min(consts["block_m"], m)
+        pad = (-m) % mb
+        qa_p = jnp.pad(qa, ((0, pad), (0, 0)))
+        blocks = qa_p.reshape(-1, mb, k)
+        out = jax.lax.map(
+            lambda blk: _lut_gather_block(blk, qw, flat), blocks)
+        return out.reshape(-1, out.shape[-1])[:m]
+
+
+@register_datapath("lowrank")
+class LowRankDatapath(Datapath):
+    """Σ_k Σ_r U[r,qa]V[r,qw]  ==  Σ_r tableU_r(qa) @ tableV_r(qw).
+    (M,K) x (K,N) -> (M,N) f32; R batched MXU matmuls."""
+
+    spec_fields = ("multiplier", "rank")
+
+    def pack(self, spec, library) -> dict:
+        return pack_lowrank(spec, library)
+
+    def forward_q(self, qa, qw, consts):
+        u = jnp.asarray(consts["u"])
+        v = jnp.asarray(consts["v"])
+        ua = jnp.take(u, qa, axis=1)   # (R,M,K) f32
+        vw = jnp.take(v, qw, axis=1)   # (R,K,N) f32
+        return jnp.einsum("rmk,rkn->mn", ua, vw,
+                          preferred_element_type=jnp.float32)

@@ -7,15 +7,23 @@ model's per-layer multiplication counts, sweeps approximate multipliers
 reporting classification accuracy together with the network-level
 relative multiplier power.  The non-swept layers use the exact int8
 datapath, the paper's golden reference.
+
+Backends are built spec-first: each multiplier name becomes a
+``BackendSpec`` materialized once against the library, so every policy
+the sweep evaluates shares the same backend objects (one jit trace per
+multiplier instead of one per policy instance).  The ``explore()``
+facade in ``repro.approx.dse`` wraps both sweeps with result caching
+and Pareto selection.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from .backend import MatmulBackend
+from .backend import BackendLike
 from .layers import ApproxPolicy
 from .power import LayerPower, network_relative_power
+from .specs import BackendSpec, MaterializedBackend
 
 
 @dataclass
@@ -27,14 +35,16 @@ class ResilienceRow:
     multiplier_rel_power: float
     mult_share: float          # fraction of network mults in this layer
     errors: dict = field(default_factory=dict)
+    spec: Optional[BackendSpec] = None
 
 
-def _backends_for(multiplier_names, library, mode: str, rank=None
-                  ) -> dict[str, MatmulBackend]:
+def _backends_for(multiplier_names, library, mode: str, rank=None,
+                  variant: str = "ref") -> dict[str, MaterializedBackend]:
     out = {}
     for name in multiplier_names:
-        out[name] = MatmulBackend.from_library(
-            name, mode=mode, rank=rank, library=library)
+        spec = BackendSpec(mode=mode, multiplier=name, rank=rank,
+                           variant=variant)
+        out[name] = spec.materialize(library)
     return out
 
 
@@ -44,11 +54,13 @@ def per_layer_sweep(
     multiplier_names: list[str],
     library,
     mode: str = "lut",
-    base: Optional[MatmulBackend] = None,
+    base: Optional[BackendLike] = None,
+    variant: str = "ref",
 ) -> list[ResilienceRow]:
     """Fig. 4: one layer approximated at a time."""
-    base = base or MatmulBackend(mode="int8")
-    backends = _backends_for(multiplier_names, library, mode)
+    base = base if base is not None else BackendSpec.golden().materialize()
+    backends = _backends_for(multiplier_names, library, mode,
+                             variant=variant)
     total = sum(layer_counts.values())
     rows = []
     for layer, count in layer_counts.items():
@@ -65,6 +77,7 @@ def per_layer_sweep(
                 multiplier_rel_power=entry.rel_power,
                 mult_share=count / total,
                 errors=entry.errors.as_dict(),
+                spec=be.spec,
             ))
     return rows
 
@@ -75,9 +88,11 @@ def all_layers_sweep(
     multiplier_names: list[str],
     library,
     mode: str = "lut",
+    variant: str = "ref",
 ) -> list[ResilienceRow]:
     """Table II: the same multiplier in every (conv) layer."""
-    backends = _backends_for(multiplier_names, library, mode)
+    backends = _backends_for(multiplier_names, library, mode,
+                             variant=variant)
     rows = []
     for mname, be in backends.items():
         policy = ApproxPolicy(default=be)
@@ -89,5 +104,6 @@ def all_layers_sweep(
             multiplier_rel_power=entry.rel_power,
             mult_share=1.0,
             errors=entry.errors.as_dict(),
+            spec=be.spec,
         ))
     return rows

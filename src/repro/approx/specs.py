@@ -1,0 +1,226 @@
+"""Serializable backend specs + cached materialization (DESIGN.md §2.2).
+
+``BackendSpec`` is the *name* of an accelerator datapath configuration:
+a frozen, value-hashable, JSON round-trippable record (mode, multiplier,
+rank, blocking, STE, kernel variant).  It carries no arrays, so it can
+live in configs, checkpoints, serve requests and cache keys.
+
+``spec.materialize(library)`` binds the spec to a concrete
+``ApproxLibrary`` and returns a ``MaterializedBackend`` holding the
+packed device constants (LUTs / low-rank factors).  Materialization is
+LRU-cached per (library, spec): resilience sweeps and the serve engine
+that reference the same multiplier twice get the SAME backend object
+back, so downstream ``jax.jit`` tracing caches hit instead of
+re-tracing per backend instance (the failure mode of the legacy
+id-hashed ``MatmulBackend``).
+"""
+from __future__ import annotations
+
+import json
+import weakref
+from collections import OrderedDict
+from dataclasses import asdict, dataclass, field, replace
+from typing import Any, Mapping, Optional
+
+from .registry import Datapath, get_datapath
+
+_EXACT_MODES = ("f32", "bf16")
+_VARIANTS = ("ref", "pallas")
+
+
+@dataclass(frozen=True)
+class BackendSpec:
+    """Value-hashable description of one emulated datapath.
+
+    ``mode`` selects the registered datapath ("f32"/"bf16" bypass
+    quantization entirely); ``variant`` selects the kernel
+    implementation ("ref" = jnp reference, "pallas" = Pallas kernel).
+    ``rank=None`` means auto (smallest R with negligible decomposition
+    error, resolved at pack time).
+    """
+
+    mode: str = "bf16"
+    multiplier: str = "mul8u_exact"
+    rank: Optional[int] = None
+    block_m: int = 512
+    ste: bool = True
+    variant: str = "ref"
+
+    def __post_init__(self):
+        if self.variant not in _VARIANTS:
+            raise ValueError(f"variant must be one of {_VARIANTS}, "
+                             f"got {self.variant!r}")
+
+    # -- constructors ---------------------------------------------------
+    @staticmethod
+    def exact(mode: str = "bf16") -> "BackendSpec":
+        return BackendSpec(mode=mode)
+
+    @staticmethod
+    def golden() -> "BackendSpec":
+        """The paper's exact 8-bit reference datapath."""
+        return BackendSpec(mode="int8")
+
+    @staticmethod
+    def from_library(multiplier: str, mode: str = "lut",
+                     rank: Optional[int] = None,
+                     variant: str = "ref") -> "BackendSpec":
+        return BackendSpec(mode=mode, multiplier=multiplier, rank=rank,
+                           variant=variant)
+
+    # -- derived --------------------------------------------------------
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode not in _EXACT_MODES
+
+    @property
+    def datapath_name(self) -> str:
+        return (self.mode if self.variant == "ref"
+                else f"{self.mode}_{self.variant}")
+
+    def with_(self, **changes) -> "BackendSpec":
+        return replace(self, **changes)
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "BackendSpec":
+        known = {f for f in BackendSpec.__dataclass_fields__}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown BackendSpec fields: {sorted(extra)}")
+        return BackendSpec(**dict(d))
+
+    @staticmethod
+    def from_json(s: str) -> "BackendSpec":
+        return BackendSpec.from_dict(json.loads(s))
+
+    # -- materialization ------------------------------------------------
+    def materialize(self, library=None) -> "MaterializedBackend":
+        return materialize(self, library)
+
+
+@dataclass(frozen=True, eq=False)  # id-hash: cache guarantees uniqueness
+class MaterializedBackend:
+    """A spec bound to packed device constants.  ``canonical`` marks
+    instances built by ``materialize`` (consts derived from the spec +
+    a library) — only those may be identified by spec alone in policy
+    cache keys; ad-hoc wrappers around hand-attached arrays are not."""
+
+    spec: BackendSpec
+    datapath: Optional[Datapath]       # None for f32/bf16
+    consts: Mapping[str, Any] = field(default_factory=dict)
+    canonical: bool = False
+
+    @property
+    def mode(self) -> str:
+        return self.spec.mode
+
+    @property
+    def ste(self) -> bool:
+        return self.spec.ste
+
+    @property
+    def multiplier(self) -> str:
+        return self.spec.multiplier
+
+    @property
+    def rank(self) -> int:
+        """Effective rank after auto-resolution (0 if not low-rank)."""
+        u = self.consts.get("u")
+        return int(u.shape[0]) if u is not None else int(self.spec.rank or 0)
+
+
+# ----------------------------------------------------------------------
+# Materialization cache
+# ----------------------------------------------------------------------
+_CACHE: "OrderedDict[tuple[int, BackendSpec], MaterializedBackend]" = \
+    OrderedDict()
+_CACHE_MAX = 256
+_FINALIZED: set[int] = set()
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _evict_library(lid: int) -> None:
+    _FINALIZED.discard(lid)
+    for k in [k for k in _CACHE if k[0] == lid]:
+        del _CACHE[k]
+
+
+def _library_key(library) -> int:
+    lid = id(library)
+    if lid not in _FINALIZED:
+        _FINALIZED.add(lid)
+        # evict on library GC so a recycled id can never alias
+        weakref.finalize(library, _evict_library, lid)
+    return lid
+
+
+_SPEC_FIELD_DEFAULTS = {"multiplier": "mul8u_exact", "rank": None,
+                        "block_m": 512}
+
+
+def canonicalize(spec: BackendSpec) -> BackendSpec:
+    """Reset fields the spec's datapath never reads to their defaults,
+    so equivalent configurations share one materialization / cache key
+    (e.g. every int8 spec collapses to ``BackendSpec.golden()``).
+    Serialization keeps the full spec; only caches canonicalize."""
+    if not spec.is_quantized:
+        return replace(spec, variant="ref", **_SPEC_FIELD_DEFAULTS)
+    try:
+        dp = get_datapath(spec.datapath_name)
+    except KeyError:
+        return spec
+    relevant = getattr(dp, "spec_fields",
+                       tuple(_SPEC_FIELD_DEFAULTS))
+    changes = {f: d for f, d in _SPEC_FIELD_DEFAULTS.items()
+               if f not in relevant and getattr(spec, f) != d}
+    return replace(spec, **changes) if changes else spec
+
+
+def materialize(spec: BackendSpec, library=None) -> MaterializedBackend:
+    """Pack ``spec`` against ``library`` (default library if None),
+    LRU-cached so equal specs share one backend object; the key is the
+    canonicalized spec, so specs differing only in fields their
+    datapath ignores share one materialization."""
+    spec = canonicalize(spec)
+    if not spec.is_quantized:
+        key = (0, spec)
+        datapath = None
+    else:
+        datapath = get_datapath(spec.datapath_name)
+        if datapath.needs_library:
+            if library is None:
+                from repro.core.library import get_default_library
+                library = get_default_library()
+            key = (_library_key(library), spec)
+        else:
+            key = (0, spec)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        _CACHE.move_to_end(key)
+        return hit
+    _STATS["misses"] += 1
+    consts = datapath.pack(spec, library) if datapath is not None else {}
+    mb = MaterializedBackend(spec=spec, datapath=datapath, consts=consts,
+                             canonical=True)
+    _CACHE[key] = mb
+    while len(_CACHE) > _CACHE_MAX:
+        _CACHE.popitem(last=False)
+    return mb
+
+
+def materialize_cache_stats() -> dict:
+    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
+            "size": len(_CACHE)}
+
+
+def clear_materialize_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0

@@ -130,19 +130,30 @@ class ApproxLibrary:
         ]
 
     def pareto_front(self, kind: str, width: int, metric: str) -> list[CircuitEntry]:
-        """Non-dominated entries on (rel_power, metric), both minimized."""
-        cands = self.select(kind=kind, width=width)
-        front = []
-        for e in cands:
-            p, m = e.rel_power, e.errors.get(metric)
-            dominated = any(
-                (o.rel_power <= p and o.errors.get(metric) <= m
-                 and (o.rel_power < p or o.errors.get(metric) < m))
-                for o in cands
-            )
-            if not dominated:
-                front.append(e)
-        return sorted(front, key=lambda e: e.rel_power)
+        """Non-dominated entries on (rel_power, metric), both minimized.
+
+        Sort-by-power sweep, O(n log n): walking power groups in
+        ascending order, a group's minimum-metric entries survive iff
+        they strictly improve on every lower-power group's best metric
+        (ties on both axes are mutually non-dominating and all kept,
+        matching the exhaustive-scan semantics)."""
+        pts = sorted(self.select(kind=kind, width=width),
+                     key=lambda e: (e.rel_power, e.errors.get(metric)))
+        front: list[CircuitEntry] = []
+        best = float("inf")     # min metric among strictly lower power
+        i = 0
+        while i < len(pts):
+            j = i
+            p = pts[i].rel_power
+            while j < len(pts) and pts[j].rel_power == p:
+                j += 1
+            m_min = pts[i].errors.get(metric)
+            if m_min < best:
+                front.extend(e for e in pts[i:j]
+                             if e.errors.get(metric) == m_min)
+                best = m_min
+            i = j
+        return front
 
     @staticmethod
     def spread_along_power(entries: list[CircuitEntry], k: int = 10) -> list[CircuitEntry]:

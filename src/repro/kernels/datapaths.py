@@ -1,0 +1,44 @@
+"""Pallas-backed datapath registrations (DESIGN.md §2.1, §4).
+
+Imported lazily by ``repro.approx.registry.get_datapath`` the first time
+a ``*_pallas`` datapath is requested, so the approx core never depends
+on the kernel layer at import time.  The packs are shared with the
+reference datapaths — only ``forward_q`` routes through the Pallas
+kernels (interpret-mode on CPU, Mosaic on TPU; see ``ops.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx.registry import (Datapath, pack_lowrank, pack_lut,
+                                   register_datapath)
+
+from .ops import approx_matmul_lut, lowrank_matmul
+
+
+@register_datapath("lut_pallas")
+class LutPallasDatapath(Datapath):
+    """Bit-true LUT emulation through the Pallas texture-gather kernel."""
+
+    spec_fields = ("multiplier",)   # kernel does its own blocking
+
+    def pack(self, spec, library) -> dict:
+        return pack_lut(spec, library)
+
+    def forward_q(self, qa, qw, consts):
+        return approx_matmul_lut(qa, qw, jnp.asarray(consts["lut"]))
+
+
+@register_datapath("lowrank_pallas")
+class LowRankPallasDatapath(Datapath):
+    """Rank-R factored emulation through the Pallas MXU kernel."""
+
+    spec_fields = ("multiplier", "rank")
+
+    def pack(self, spec, library) -> dict:
+        return pack_lowrank(spec, library)
+
+    def forward_q(self, qa, qw, consts):
+        return lowrank_matmul(qa, qw, jnp.asarray(consts["u"]),
+                              jnp.asarray(consts["v"]))

@@ -29,6 +29,9 @@ def main() -> None:
                     choices=("bf16", "int8", "lut", "lowrank"))
     ap.add_argument("--multiplier", default="auto")
     ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--policy-json", default=None,
+                    help="path to a serialized ApproxPolicy (overrides "
+                         "--mode/--multiplier/--rank)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,8 +39,14 @@ def main() -> None:
         cfg = cfg.reduced()
     fns = model_fns(cfg)
     params = fns.init_params(jax.random.PRNGKey(0), cfg)
-    policy = (train_policy() if args.mode == "bf16"
-              else serve_policy(args.multiplier, args.mode, args.rank))
+    if args.policy_json:
+        import json
+        from repro.approx.layers import ApproxPolicy
+        with open(args.policy_json) as f:
+            policy = ApproxPolicy.from_json(json.load(f))
+    else:
+        policy = (train_policy() if args.mode == "bf16"
+                  else serve_policy(args.multiplier, args.mode, args.rank))
     engine = Engine(cfg, params, policy)
 
     rng = np.random.default_rng(0)

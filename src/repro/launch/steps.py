@@ -8,6 +8,7 @@ the low-rank MXU emulation by default (DESIGN.md §4.2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Optional
@@ -16,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.backend import MatmulBackend
 from repro.approx.layers import ApproxPolicy
+from repro.approx.specs import BackendSpec
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, batch_specs
 from repro.models.common import LMConfig
@@ -27,17 +28,26 @@ from repro.train.optimizer import OptimizerConfig
 
 
 def train_policy() -> ApproxPolicy:
-    return ApproxPolicy(default=MatmulBackend(mode="bf16"))
-
-
-_SERVE_BACKEND_CACHE: dict = {}
+    return ApproxPolicy(default=BackendSpec(mode="bf16").materialize())
 
 
 def pick_case_multiplier(library=None) -> str:
     """Deterministic pick: Pareto(power x MAE) multiplier nearest 75%
-    relative power — the paper's 'interesting' regime (Table II)."""
+    relative power — the paper's 'interesting' regime (Table II).
+    Memoized for the default library so repeated serve_policy('auto')
+    calls don't rescan the whole library."""
+    if library is None:
+        return _pick_default_case_multiplier()
+    return _pick_case_multiplier(library)
+
+
+@functools.lru_cache(maxsize=1)
+def _pick_default_case_multiplier() -> str:
     from repro.core.library import get_default_library
-    lib = library if library is not None else get_default_library()
+    return _pick_case_multiplier(get_default_library())
+
+
+def _pick_case_multiplier(lib) -> str:
     front = lib.pareto_front("multiplier", 8, "mae")
     cands = [e for e in front if e.source != "exact"]
     if not cands:
@@ -52,13 +62,13 @@ def serve_policy(multiplier: str = "auto", mode: str = "lowrank",
     benchmarks/rank_analysis), while weight-side table traffic stays
     4x instead of up-to-16x.  EXPERIMENTS.md §Perf iterates on this."""
     if mode in ("bf16", "int8"):
-        return ApproxPolicy(default=MatmulBackend(mode=mode))
-    key = (multiplier, mode, rank)
-    if key not in _SERVE_BACKEND_CACHE:
-        name = pick_case_multiplier() if multiplier == "auto" else multiplier
-        _SERVE_BACKEND_CACHE[key] = MatmulBackend.from_library(
-            name, mode=mode, rank=rank)
-    return ApproxPolicy(default=_SERVE_BACKEND_CACHE[key])
+        return ApproxPolicy(default=BackendSpec(mode=mode).materialize())
+    name = pick_case_multiplier() if multiplier == "auto" else multiplier
+    # spec materialization is LRU-cached per (library, spec): repeated
+    # cells with the same serve config share one backend object (and
+    # therefore one trace) without a bespoke cache here.
+    spec = BackendSpec(mode=mode, multiplier=name, rank=rank)
+    return ApproxPolicy(default=spec.materialize())
 
 
 @dataclass

@@ -2,10 +2,17 @@
 static KV cache, jitted end-to-end.  The approximate-multiplier backend
 (int8 + LUT/lowrank) is selected per request batch via ApproxPolicy —
 this is the "accelerator being emulated" serving path.
+
+Policies are spec-first (DESIGN.md §2): a request may carry a
+serialized policy (``ServeConfig.policy``, the ``to_json_dict`` form),
+and the engine materializes it against its library and keeps one jitted
+(prefill, decode) pair per distinct policy — switching the emulated
+accelerator per request costs a dict lookup after the first use.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional
 
@@ -23,36 +30,68 @@ class ServeConfig:
     max_new_tokens: int = 16
     temperature: float = 0.0     # 0 = greedy
     seed: int = 0
+    # Per-request accelerator selection: a serialized ApproxPolicy
+    # (``ApproxPolicy.to_json_dict()``); None = the engine default.
+    policy: Optional[dict] = None
 
 
 class Engine:
     def __init__(self, cfg: LMConfig, params,
-                 policy: ApproxPolicy = EXACT_POLICY):
+                 policy: ApproxPolicy = EXACT_POLICY,
+                 library=None):
         self.cfg = cfg
         self.params = params
-        self.policy = policy
+        self._library = library
+        self.policy = policy.materialize(library)
+        # LRU of jitted (prefill, decode) pairs keyed by policy spec —
+        # bounded so a client sweeping per-request policies cannot grow
+        # compile caches without limit.
+        self._steps: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._steps_max = 8
         self.fns = model_fns(cfg)
-        self._prefill = jax.jit(
-            lambda p, b, c: self.fns.forward_prefill(p, b, c, cfg, policy))
-        self._decode = jax.jit(
-            lambda p, t, c: self.fns.forward_decode(p, t, c, cfg, policy))
+        self._prefill, self._decode = self._steps_for(self.policy)
+
+    def _steps_for(self, policy: ApproxPolicy) -> tuple:
+        """One jitted (prefill, decode) pair per distinct policy spec."""
+        key = policy.cache_key()
+        if key in self._steps:
+            self._steps.move_to_end(key)
+            return self._steps[key]
+        cfg = self.cfg
+        prefill = jax.jit(
+            lambda p, b, c: self.fns.forward_prefill(p, b, c, cfg,
+                                                     policy))
+        decode = jax.jit(
+            lambda p, t, c: self.fns.forward_decode(p, t, c, cfg,
+                                                    policy))
+        self._steps[key] = (prefill, decode)
+        while len(self._steps) > self._steps_max:
+            self._steps.popitem(last=False)
+        return self._steps[key]
+
+    def _request_policy(self, serve_cfg: "ServeConfig") -> ApproxPolicy:
+        if serve_cfg.policy is None:
+            return self.policy
+        req = ApproxPolicy.from_json(serve_cfg.policy)
+        return req.materialize(self._library)
 
     def generate(self, prompts: np.ndarray, serve_cfg: ServeConfig,
                  extras: Optional[dict] = None) -> np.ndarray:
         """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
+        prefill, decode = self._steps_for(self._request_policy(serve_cfg))
         b, s = prompts.shape
         max_len = s + serve_cfg.max_new_tokens
         cache = self.fns.init_cache(self.cfg, b, max_len)
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-        logits, cache = self._prefill(self.params, batch, cache)
+        logits, cache = prefill(self.params, batch, cache)
         key = jax.random.PRNGKey(serve_cfg.seed)
         out = []
         tok = self._sample(logits, serve_cfg, key)
         out.append(tok)
         for i in range(serve_cfg.max_new_tokens - 1):
-            logits, cache = self._decode(self.params, tok, cache)
+            logits, cache = decode(self.params, tok, cache)
             key = jax.random.fold_in(key, i)
             tok = self._sample(logits, serve_cfg, key)
             out.append(tok)

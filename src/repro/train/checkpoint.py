@@ -82,7 +82,14 @@ class CheckpointManager:
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, state: Any, metadata: Optional[dict] = None,
-             block: bool = True) -> None:
+             block: bool = True, policy: Optional[Any] = None) -> None:
+        """``policy`` (an ``repro.approx.layers.ApproxPolicy``) is
+        serialized spec-first into the manifest metadata, so the chosen
+        accelerator configuration ships with the weights; recover it
+        with ``policy_from_metadata(restore(...)[1])``."""
+        if policy is not None:
+            metadata = dict(metadata or {})
+            metadata["approx_policy"] = policy.to_json_dict()
         self.wait()  # one outstanding async save at a time
         if self.async_save and not block:
             host_state = jax.tree.map(np.asarray, state)  # device->host now
@@ -155,3 +162,13 @@ class CheckpointManager:
         else:
             state = jax.tree.map(jnp.asarray, state)
         return state, manifest.get("metadata", {})
+
+
+def policy_from_metadata(metadata: dict):
+    """Recover the ApproxPolicy stored by ``save(..., policy=...)``,
+    or None when the checkpoint predates policy shipping."""
+    d = (metadata or {}).get("approx_policy")
+    if d is None:
+        return None
+    from repro.approx.layers import ApproxPolicy
+    return ApproxPolicy.from_json_dict(d)

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# real hypothesis, or the deterministic fallback conftest.py installs
 from hypothesis import given, settings, strategies as st
 
 from repro.approx.backend import MatmulBackend, backend_matmul
@@ -95,6 +97,29 @@ def test_conv_mult_count():
     # 32x32x3 -> 16 channels 3x3 SAME stride 1: B*32*32*9*3*16
     assert conv_mult_count((2, 32, 32, 3), (3, 3, 3, 16)) \
         == 2 * 32 * 32 * 9 * 3 * 16
+    # SAME with stride on an odd extent is a ceil-div: 33 -> 17
+    assert conv_mult_count((1, 33, 33, 3), (3, 3, 3, 16), stride=2) \
+        == 17 * 17 * 9 * 3 * 16
+    # VALID shrinks by the kernel: 32 - 3 + 1 = 30
+    assert conv_mult_count((1, 32, 32, 3), (3, 3, 3, 16),
+                           padding="VALID") == 30 * 30 * 9 * 3 * 16
+    # VALID with stride: floor((32-3)/2)+1 = 15
+    assert conv_mult_count((1, 32, 32, 3), (3, 3, 3, 16), stride=2,
+                           padding="VALID") == 15 * 15 * 9 * 3 * 16
+
+
+@pytest.mark.parametrize("stride,pad,size", [
+    (1, "SAME", 16), (2, "SAME", 15), (1, "VALID", 16), (2, "VALID", 15),
+])
+def test_conv_mult_count_matches_executed_output(stride, pad, size):
+    """Power accounting must count the dims conv2d actually produces."""
+    x = jnp.asarray(RNG.normal(size=(2, size, size, 3)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(3, 3, 3, 8)), jnp.float32)
+    pol = ApproxPolicy(default=MatmulBackend(mode="f32"))
+    y = conv2d(pol, "c", x, w, stride=stride, padding=pad)
+    _, ho, wo, cout = y.shape
+    assert conv_mult_count(x.shape, w.shape, stride, pad) \
+        == 2 * ho * wo * 3 * 3 * 3 * cout
 
 
 def test_prepared_weights_match_lowrank():

@@ -1,0 +1,141 @@
+"""explore()/select_multiplier DSE facade: equivalence with the raw
+sweeps, eval caching, and materialization reuse across sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import clear_materialize_cache, materialize_cache_stats
+from repro.approx.dse import explore, pareto_points, select_multiplier
+from repro.approx.layers import ApproxPolicy
+from repro.approx.resilience import all_layers_sweep, per_layer_sweep
+from repro.approx.specs import BackendSpec
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+
+RNG = np.random.default_rng(7)
+LAYER_COUNTS = {"layer_a": 100, "layer_b": 300}
+MULTS = ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc3"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 5):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+def make_eval(counter):
+    """Deterministic two-'layer' toy model; accuracy = 1/(1+error)."""
+    x = jnp.asarray(RNG.normal(size=(12, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 8)), jnp.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+
+    def eval_fn(policy: ApproxPolicy) -> float:
+        counter[0] += 1
+        err = 0.0
+        for name in LAYER_COUNTS:
+            y = np.asarray(policy.matmul(name, x, w))
+            err += float(np.abs(y - ref).mean())
+        return 1.0 / (1.0 + err)
+
+    return eval_fn
+
+
+def test_explore_reproduces_raw_sweeps(lib):
+    eval_fn = make_eval([0])
+    result = explore(eval_fn, LAYER_COUNTS, lib, multipliers=MULTS,
+                     mode="lut")
+
+    golden = BackendSpec.golden().materialize()
+    ref_all = all_layers_sweep(eval_fn, LAYER_COUNTS, MULTS, lib,
+                               mode="lut")
+    ref_per = per_layer_sweep(eval_fn, LAYER_COUNTS, MULTS, lib,
+                              mode="lut", base=golden)
+
+    assert [(p.multiplier, p.layer) for p in result.all_layers] \
+        == [(r.multiplier, r.layer) for r in ref_all]
+    for p, r in zip(result.all_layers, ref_all):
+        assert p.accuracy == r.accuracy
+        assert p.network_rel_power == r.network_rel_power
+    assert len(result.per_layer) == len(ref_per) \
+        == len(MULTS) * len(LAYER_COUNTS)
+    for p, r in zip(result.per_layer, ref_per):
+        assert (p.multiplier, p.layer, p.accuracy) \
+            == (r.multiplier, r.layer, r.accuracy)
+        assert p.mult_share == r.mult_share
+
+
+def test_explore_caches_evals_across_calls(lib):
+    counter = [0]
+    eval_fn = make_eval(counter)
+    cache: dict = {}
+    explore(eval_fn, LAYER_COUNTS, lib, multipliers=MULTS, mode="lut",
+            cache=cache)
+    n_first = counter[0]
+    # baseline + all-layers (3) + per-layer (3 mults x 2 layers)
+    assert n_first == 1 + len(MULTS) + len(MULTS) * len(LAYER_COUNTS)
+    explore(eval_fn, LAYER_COUNTS, lib, multipliers=MULTS, mode="lut",
+            cache=cache)
+    assert counter[0] == n_first, "second exploration must be all cache"
+
+
+def test_sweeps_share_materialized_backends(lib):
+    """Two sweeps over the same multiplier pack (and trace) once."""
+    clear_materialize_cache()
+    eval_fn = make_eval([0])
+    explore(eval_fn, LAYER_COUNTS, lib, multipliers=MULTS, mode="lut")
+    # one pack per multiplier + golden int8 + the bf16 default is never
+    # touched here; per-layer and all-layers sweeps share all entries
+    assert materialize_cache_stats()["misses"] == len(MULTS) + 1
+
+
+def test_select_multiplier_picks_lowest_power_within_budget(lib):
+    result = explore(make_eval([0]), LAYER_COUNTS, lib, multipliers=MULTS,
+                     mode="lut", quality_bound=1.0)
+    # generous budget: everything qualifies -> lowest-power circuit
+    powers = {p.multiplier: p.network_rel_power for p in result.all_layers}
+    assert result.selected is not None
+    assert result.selected.multiplier == min(powers, key=powers.get)
+
+    # zero budget: only the exact multiplier matches the golden baseline
+    tight = select_multiplier(result, max_accuracy_drop=0.0)
+    assert tight is not None and tight.multiplier == "mul8u_exact"
+
+    # impossible budget: nothing qualifies
+    assert select_multiplier(result, max_accuracy_drop=-1.0) is None
+
+
+def test_selected_point_yields_deployable_policy(lib):
+    result = explore(make_eval([0]), LAYER_COUNTS, lib, multipliers=MULTS,
+                     mode="lut", quality_bound=1.0)
+    pol = result.selected.policy()
+    blob = pol.to_json()
+    assert ApproxPolicy.from_json(blob).cache_key() == pol.cache_key()
+    # and it actually runs
+    acc = make_eval([0])(pol.materialize(lib))
+    assert 0.0 < acc <= 1.0
+
+
+def test_pareto_points_nondominated():
+    from repro.approx.dse import DesignPoint
+    pts = [DesignPoint("a", "all", 0.9, 1.0, 1.0, 1.0),
+           DesignPoint("b", "all", 0.8, 0.5, 0.5, 1.0),
+           DesignPoint("c", "all", 0.7, 0.6, 0.6, 1.0),   # dominated by b
+           DesignPoint("d", "all", 0.5, 0.2, 0.2, 1.0)]
+    front = pareto_points(pts)
+    assert [p.multiplier for p in front] == ["d", "b", "a"]
+
+
+def test_pareto_points_keeps_ties_on_both_axes():
+    from repro.approx.dse import DesignPoint
+    pts = [DesignPoint("a", "all", 0.8, 0.5, 0.5, 1.0),
+           DesignPoint("b", "all", 0.8, 0.5, 0.5, 1.0),   # exact tie
+           DesignPoint("c", "all", 0.7, 0.5, 0.5, 1.0)]   # dominated
+    front = pareto_points(pts)
+    assert sorted(p.multiplier for p in front) == ["a", "b"]

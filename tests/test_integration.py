@@ -88,6 +88,32 @@ def test_engine_approx_vs_exact_agree_mostly(tiny_lm):
     assert (out_a == out_b).mean() >= 0.5
 
 
+def test_engine_per_request_policy_selection(tiny_lm):
+    """One engine, two requests with different serialized policies:
+    the accelerator is selected per request, and repeated policies
+    reuse the engine's jitted step pair."""
+    from repro.approx.layers import ApproxPolicy
+    from repro.approx.specs import BackendSpec
+    cfg, fns, params = tiny_lm
+    engine = Engine(cfg, params)
+    prompts = np.random.default_rng(2).integers(
+        0, cfg.vocab, (2, 8)).astype(np.int32)
+
+    pol_int8 = ApproxPolicy(default=BackendSpec.golden())
+    pol_f32 = ApproxPolicy(default=BackendSpec.exact("f32"))
+    out_a = engine.generate(prompts, ServeConfig(
+        max_new_tokens=3, policy=pol_int8.to_json_dict()))
+    out_b = engine.generate(prompts, ServeConfig(
+        max_new_tokens=3, policy=pol_f32.to_json_dict()))
+    assert out_a.shape == out_b.shape == (2, 3)
+
+    n_compiled = len(engine._steps)
+    engine.generate(prompts, ServeConfig(
+        max_new_tokens=2, policy=pol_int8.to_json_dict()))
+    assert len(engine._steps) == n_compiled, \
+        "repeated policy must reuse the jitted steps"
+
+
 def test_resilience_ordering_on_trained_model():
     """Paper's qualitative claim: aggressive multipliers degrade a
     TRAINED classifier; near-exact ones do not."""

@@ -35,6 +35,23 @@ def test_pareto_front_is_nondominated(tiny_lib):
                 f"{a.name} dominated by {b.name}"
 
 
+def test_pareto_front_matches_quadratic_reference(tiny_lib):
+    """The O(n log n) sweep must reproduce the exhaustive dominance
+    scan exactly, ties included."""
+    for metric in ("mae", "wce", "er"):
+        cands = tiny_lib.select(kind="multiplier", width=8)
+        ref = []
+        for e in cands:
+            p, m = e.rel_power, e.errors.get(metric)
+            if not any((o.rel_power <= p and o.errors.get(metric) <= m
+                        and (o.rel_power < p or o.errors.get(metric) < m))
+                       for o in cands):
+                ref.append(e.name)
+        got = [e.name for e in tiny_lib.pareto_front("multiplier", 8,
+                                                     metric)]
+        assert sorted(got) == sorted(ref)
+
+
 def test_exact_is_on_every_front(tiny_lib):
     """The exact multiplier has zero error: it must be Pareto optimal."""
     for metric in ("mae", "wce", "mre"):

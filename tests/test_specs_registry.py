@@ -1,0 +1,239 @@
+"""Spec-first API: BackendSpec round-trip, registry dispatch equivalence
+vs the legacy mode= paths, materialization caching, policy JSON."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import (ApproxPolicy, BackendSpec, Datapath,
+                          MatmulBackend, available_datapaths, backend_matmul,
+                          clear_materialize_cache, get_datapath, materialize,
+                          materialize_cache_stats, register_datapath, spec_of)
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def lib():
+    """Tiny hand-built library: exact + trunc-2 + trunc-4 multipliers."""
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 4):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+@pytest.fixture()
+def xw():
+    x = jnp.asarray(RNG.normal(size=(9, 40)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(40, 16)), jnp.float32)
+    return x, w
+
+
+# ----------------------------------------------------------------------
+# BackendSpec: value semantics + serialization
+# ----------------------------------------------------------------------
+def test_spec_value_hashable():
+    a = BackendSpec(mode="lut", multiplier="mul8u_trunc4", rank=3)
+    b = BackendSpec(mode="lut", multiplier="mul8u_trunc4", rank=3)
+    assert a == b and hash(a) == hash(b)
+    assert a != a.with_(rank=4)
+    assert len({a, b, a.with_(mode="lowrank")}) == 2
+
+
+def test_spec_json_roundtrip():
+    for spec in (BackendSpec(), BackendSpec.golden(),
+                 BackendSpec(mode="lut", multiplier="mul8u_trunc2",
+                             block_m=128, ste=False),
+                 BackendSpec(mode="lowrank", rank=5, variant="pallas")):
+        back = BackendSpec.from_json(spec.to_json())
+        assert back == spec and hash(back) == hash(spec)
+
+
+def test_spec_rejects_unknown_fields_and_variants():
+    with pytest.raises(ValueError):
+        BackendSpec.from_dict({"mode": "lut", "nope": 1})
+    with pytest.raises(ValueError):
+        BackendSpec(variant="cuda")
+
+
+# ----------------------------------------------------------------------
+# Registry: dispatch equivalence vs the legacy mode= paths
+# ----------------------------------------------------------------------
+def test_builtin_datapaths_registered():
+    for name in ("int8", "lut", "lowrank"):
+        assert name in available_datapaths()
+        assert get_datapath(name) is get_datapath(name)
+    with pytest.raises(KeyError):
+        get_datapath("booth")   # not (yet) registered
+
+
+@pytest.mark.parametrize("mode", ["lut", "lowrank"])
+@pytest.mark.parametrize("variant", ["ref", "pallas"])
+def test_registry_matches_legacy_paths(lib, xw, mode, variant):
+    x, w = xw
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = MatmulBackend.from_library(
+            "mul8u_trunc4", mode=mode, library=lib,
+            use_pallas=(variant == "pallas"))
+    y_old = backend_matmul(x, w, legacy)
+    spec = BackendSpec(mode=mode, multiplier="mul8u_trunc4",
+                       variant=variant)
+    y_new = backend_matmul(x, w, spec.materialize(lib))
+    np.testing.assert_allclose(np.asarray(y_new), np.asarray(y_old),
+                               rtol=0, atol=0)
+
+
+def test_int8_spec_matches_legacy(xw):
+    x, w = xw
+    y_old = backend_matmul(x, w, MatmulBackend(mode="int8"))
+    y_new = backend_matmul(x, w, BackendSpec.golden())
+    np.testing.assert_allclose(np.asarray(y_new), np.asarray(y_old),
+                               rtol=0, atol=0)
+
+
+def test_register_custom_datapath_without_touching_backend(xw):
+    """New datapaths plug in through the registry alone."""
+    @register_datapath("allzero")
+    class AllZero(Datapath):
+        needs_library = False
+
+        def forward_q(self, qa, qw, consts):
+            return jnp.zeros((qa.shape[0], qw.shape[1]), jnp.float32)
+
+    x, w = xw
+    y = backend_matmul(x, w, BackendSpec(mode="allzero"))
+    assert y.shape == (x.shape[0], w.shape[1])
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ----------------------------------------------------------------------
+# Materialization cache
+# ----------------------------------------------------------------------
+def test_materialize_cached_one_object_per_spec(lib):
+    clear_materialize_cache()
+    spec = BackendSpec(mode="lowrank", multiplier="mul8u_trunc4")
+    a = materialize(spec, lib)
+    b = materialize(spec, lib)
+    assert a is b
+    stats = materialize_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    # a distinct spec packs separately
+    c = materialize(spec.with_(rank=1), lib)
+    assert c is not a and c.rank == 1
+    assert materialize_cache_stats()["misses"] == 2
+
+
+def test_materialized_backend_exposes_effective_rank(lib):
+    mb = BackendSpec(mode="lowrank", multiplier="mul8u_exact",
+                     rank=None).materialize(lib)
+    assert mb.rank == mb.consts["u"].shape[0] >= 1
+    assert mb.multiplier == "mul8u_exact" and mb.mode == "lowrank"
+
+
+def test_prepare_weight_accepts_spec_backends(lib, xw):
+    from repro.approx.backend import prepare_weight
+    x, w = xw
+    mb = BackendSpec(mode="lowrank", multiplier="mul8u_exact",
+                     rank=2).materialize(lib)
+    y_ref = backend_matmul(x, w, mb)
+    y_prep = backend_matmul(x, prepare_weight(w, mb), mb)
+    scale = float(jnp.abs(y_ref).max())
+    assert float(jnp.abs(y_prep - y_ref).max()) < 0.02 * scale + 0.05
+
+
+# ----------------------------------------------------------------------
+# Policy serialization
+# ----------------------------------------------------------------------
+def test_policy_json_roundtrip(lib):
+    pol = ApproxPolicy(
+        default=BackendSpec.golden(),
+        overrides=[("s0_*", BackendSpec(mode="lut",
+                                        multiplier="mul8u_trunc2")),
+                   ("head", BackendSpec.exact("f32"))])
+    back = ApproxPolicy.from_json(pol.to_json())
+    assert back.cache_key() == pol.cache_key()
+    assert spec_of(back.backend_for("s0_conv1")).multiplier == "mul8u_trunc2"
+    assert spec_of(back.backend_for("head")).mode == "f32"
+    assert spec_of(back.backend_for("other")).mode == "int8"
+
+
+def test_policy_json_covers_legacy_backends():
+    pol = ApproxPolicy(default=MatmulBackend(mode="int8"))
+    back = ApproxPolicy.from_json(pol.to_json())
+    assert spec_of(back.default) == spec_of(pol.default)
+
+
+def test_policy_materialize_preserves_legacy_arrays(lib, xw):
+    """Legacy backends carrying hand-attached arrays must keep them
+    through materialize — not be rebuilt by multiplier name."""
+    x, w = xw
+    zeros = MatmulBackend(mode="lut", lut=np.zeros((256, 256), np.int32),
+                          multiplier="mul8u_exact")
+    pol = ApproxPolicy(default=zeros).materialize(lib)
+    y = backend_matmul(x, w, pol.default)
+    y_direct = backend_matmul(x, w, zeros)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_direct),
+                               rtol=0, atol=0)
+    # and it is genuinely the zeros LUT, not the library's exact one
+    y_lib = backend_matmul(x, w, BackendSpec(
+        mode="lut", multiplier="mul8u_exact").materialize(lib))
+    assert float(np.abs(np.asarray(y) - np.asarray(y_lib)).max()) > 1.0
+
+
+def test_canonicalization_collapses_irrelevant_fields(lib):
+    """Specs differing only in fields their datapath ignores share one
+    materialization (and therefore one jit trace)."""
+    from repro.approx import canonicalize, materialize
+    # every int8 spec is the golden datapath
+    assert canonicalize(BackendSpec(mode="int8", multiplier="x",
+                                    rank=9, block_m=64)) \
+        == BackendSpec.golden()
+    assert materialize(BackendSpec(mode="int8", rank=9)) \
+        is materialize(BackendSpec.golden())
+    # lut ignores rank; lowrank keeps it
+    a = materialize(BackendSpec(mode="lut", multiplier="mul8u_trunc4",
+                                rank=4), lib)
+    b = materialize(BackendSpec(mode="lut", multiplier="mul8u_trunc4"),
+                    lib)
+    assert a is b
+    assert canonicalize(BackendSpec(mode="lowrank", rank=4)).rank == 4
+
+
+def test_to_json_warns_on_hand_attached_arrays():
+    pol = ApproxPolicy(default=MatmulBackend(
+        mode="lut", lut=np.zeros((256, 256), np.int32)))
+    with pytest.warns(UserWarning, match="hand-attached"):
+        pol.to_json()
+
+
+def test_cache_key_distinguishes_hand_attached_arrays(lib):
+    """A hand-attached LUT must never share a policy cache key with the
+    library-built spec of the same mode/multiplier."""
+    zeros = MatmulBackend(mode="lut", lut=np.zeros((256, 256), np.int32),
+                          multiplier="mul8u_exact")
+    spec = BackendSpec(mode="lut", multiplier="mul8u_exact")
+    k_legacy = ApproxPolicy(default=zeros).cache_key()
+    k_spec = ApproxPolicy(default=spec).cache_key()
+    k_canon = ApproxPolicy(default=spec.materialize(lib)).cache_key()
+    assert k_legacy != k_spec
+    assert k_spec == k_canon   # canonical materialization == its spec
+    # exact-mode legacy backends carry no arrays: spec-identified
+    assert ApproxPolicy(default=MatmulBackend(mode="int8")).cache_key() \
+        == ApproxPolicy(default=BackendSpec.golden()).cache_key()
+
+
+def test_policy_materialize_shares_backend_objects(lib):
+    clear_materialize_cache()
+    spec = BackendSpec(mode="lut", multiplier="mul8u_trunc4")
+    p1 = ApproxPolicy(default=spec).materialize(lib)
+    p2 = ApproxPolicy(default=spec).materialize(lib)
+    assert p1.default is p2.default   # same object -> same jit trace key
