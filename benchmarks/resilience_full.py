@@ -1,14 +1,33 @@
 """Paper Table II: multiplier characterization x classification accuracy
 with the same approximate multiplier in every conv layer (trained
 ResNet-8 on synthetic CIFAR; evolved + truncation + BAM entries).
-Runs through the ``explore()`` DSE facade and reports the multiplier
-``select_multiplier`` would deploy for a 1-point accuracy budget."""
+
+Runs the all-layers sweep BOTH ways — sequentially (one jit trace per
+multiplier, the pre-batching engine) and batched (one ``LutBank``
+program, DESIGN.md §2.4) — writes the wall-clock comparison to
+``benchmarks/results/BENCH_resilience.json`` (the committed copy is a
+point-in-time snapshot; CI regenerates and uploads it as an artifact
+each run), then FAILS if the accuracies disagree, so a broken
+bit-identical contract can never pass CI silently.  Table II rows and
+the multiplier ``select_multiplier`` would deploy for a 1-point
+accuracy budget are emitted from the batched result.
+
+``--quick`` (CI mode) skips the 320-step training run and shrinks the
+eval set; the sequential-vs-batched comparison is unaffected because
+both paths share the model and eval set.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
-from repro.approx.dse import explore, select_multiplier
+import jax
+
+from repro.approx.dse import DesignPoint, ExploreResult, select_multiplier
 from repro.approx.layers import ApproxPolicy
+from repro.approx.resilience import all_layers_sweep
 from repro.approx.specs import BackendSpec
 from repro.core.library import get_default_library
 from repro.models import resnet
@@ -16,26 +35,87 @@ from repro.models import resnet
 from .common import emit
 from .resilience_common import make_eval_fn, trained_resnet
 
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_resilience.json")
 
-def run(n_mult: int = 8) -> None:
-    lib = get_default_library()
-    cfg, params = trained_resnet(8)
-    eval_fn = make_eval_fn(cfg, params)
 
-    t0 = time.time()
-    acc_f32 = eval_fn(ApproxPolicy(default=BackendSpec.exact("f32")))
-    us = (time.time() - t0) * 1e6
-    emit("table_II/float", us, f"acc={acc_f32:.4f};power=1.0")
-
+def _case_study_names(lib, n_mult: int) -> list[str]:
     sel = lib.case_study_selection(per_metric=10)
     names = [e.name for e in sel][:n_mult]
     # always include the paper's baselines
     for extra in ("mul8u_trunc7", "mul8u_trunc6", "mul8u_bam_h0_v4"):
         if extra in lib.entries and extra not in names:
             names.append(extra)
+    return names
+
+
+def run(n_mult: int = 8, quick: bool = False) -> dict:
+    lib = get_default_library()
+    if quick:
+        cfg = resnet.resnet_config(8)
+        params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+        eval_fn = make_eval_fn(cfg, params, eval_n=32, batch=32)
+    else:
+        cfg, params = trained_resnet(8)
+        eval_fn = make_eval_fn(cfg, params)
+
+    t0 = time.time()
+    acc_f32 = eval_fn(ApproxPolicy(default=BackendSpec.exact("f32")))
+    us = (time.time() - t0) * 1e6
+    emit("table_II/float", us, f"acc={acc_f32:.4f};power=1.0")
+
+    names = _case_study_names(lib, n_mult)
     counts = resnet.layer_mult_counts(cfg)
-    result = explore(eval_fn, counts, lib, multipliers=names, mode="lut",
-                     per_layer=False)
+    for n in names:                     # warm LUTs so neither path pays
+        lib.lut(n)
+
+    # -- sequential vs batched all-layers sweep ------------------------
+    t0 = time.perf_counter()
+    rows_seq = all_layers_sweep(eval_fn, counts, names, lib, mode="lut")
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows_bat = all_layers_sweep(eval_fn, counts, names, lib, mode="lut",
+                                batch=True)
+    bat_s = time.perf_counter() - t0
+    identical = [r.accuracy for r in rows_seq] == \
+                [r.accuracy for r in rows_bat]
+    speedup = seq_s / bat_s if bat_s > 0 else float("inf")
+    emit("resilience/all_layers_sequential", seq_s * 1e6,
+         f"n_mult={len(names)}")
+    emit("resilience/all_layers_batched", bat_s * 1e6,
+         f"n_mult={len(names)};speedup={speedup:.2f};"
+         f"bit_identical={identical}")
+
+    record = {
+        "benchmark": "resilience_all_layers_sweep",
+        "n_mult": len(names),
+        "multipliers": names,
+        "quick": quick,
+        "eval_n": 32 if quick else 256,
+        "sequential_s": round(seq_s, 4),
+        "batched_s": round(bat_s, 4),
+        "speedup": round(speedup, 2),
+        "bit_identical": identical,
+        "backend": jax.default_backend(),
+        "rows": [{"multiplier": r.multiplier,
+                  "accuracy": round(r.accuracy, 6),
+                  "network_rel_power": round(r.network_rel_power, 6)}
+                 for r in rows_bat],
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("resilience/bench_record", 0.0, BENCH_PATH)
+    if not identical:                  # record written first for triage
+        raise SystemExit(
+            "batched sweep diverged from the sequential path — the "
+            f"bit-identical contract is broken (see {BENCH_PATH})")
+
+    # -- Table II from the batched rows (no third sweep) ---------------
+    baseline = eval_fn(ApproxPolicy(default=BackendSpec.golden()))
+    result = ExploreResult(
+        baseline_accuracy=baseline,
+        all_layers=[DesignPoint.from_row(r) for r in rows_bat])
     emit("table_II/8bit_exact_golden", us,
          f"acc={result.baseline_accuracy:.4f};power=1.0")
     for r in sorted(result.all_layers, key=lambda r: -r.network_rel_power):
@@ -47,7 +127,17 @@ def run(n_mult: int = 8) -> None:
     if pick is not None:
         emit(f"table_II/selected/{pick.multiplier}", us,
              f"acc={pick.accuracy:.4f};power={pick.network_rel_power:.4f}")
+    return record
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-mult", type=int, default=None,
+                    help="candidate count (default: 8, or 16 with "
+                         "--quick where the sweep is cheap)")
+    ap.add_argument("--quick", action="store_true",
+                    help="untrained model + small eval set (CI)")
+    args = ap.parse_args()
+    n_mult = (args.n_mult if args.n_mult is not None
+              else (16 if args.quick else 8))
+    run(n_mult=n_mult, quick=args.quick)

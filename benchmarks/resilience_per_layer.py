@@ -1,7 +1,10 @@
 """Paper Fig. 4: accuracy drop vs power drop when approximate
 multipliers are inserted into ONE layer of ResNet-8 at a time; layers
 with a larger multiplier share should show proportionally larger
-impact.  Runs through the ``explore()`` DSE facade (cached sweeps)."""
+impact.  Runs through the ``explore()`` DSE facade on the batched
+resilience engine (``batch=True``): each layer evaluates the whole
+multiplier bank in one compiled program — O(n_layers) programs instead
+of O(n_layers * n_mult) traces (DESIGN.md §2.4)."""
 from __future__ import annotations
 
 import time
@@ -24,7 +27,7 @@ def run(n_mult: int = 3) -> None:
     counts = resnet.layer_mult_counts(cfg)
     t0 = time.time()
     result = explore(eval_fn, counts, lib, multipliers=names, mode="lut",
-                     all_layers=False)
+                     all_layers=False, batch=True)
     rows = result.per_layer
     us = (time.time() - t0) / max(len(rows), 1) * 1e6
     for r in rows:

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs lint: verify that the repo's markdown front doors don't rot.
+
+Checks, for each markdown file given on the command line (default:
+README.md DESIGN.md):
+
+  1. every relative markdown link ``[text](path)`` points at a file or
+     directory that exists (http(s)/mailto links are skipped);
+  2. every ``DESIGN.md §N[.M]`` section cited from a Python docstring
+     under src/ or benchmarks/ resolves to a ``§N[.M]`` heading that
+     actually exists in DESIGN.md (the §-citation convention used
+     throughout the codebase).
+
+Exit code 0 when clean, 1 with a per-problem report otherwise — wired
+into the CI docs job next to ``python -m compileall``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+CITE_RE = re.compile(r"DESIGN\.md\s+(§[0-9]+(?:\.[0-9]+)?)")
+HEADING_RE = re.compile(r"^#{1,6}\s.*?(§[0-9]+(?:\.[0-9]+)?)", re.M)
+
+
+def check_links(md_path: Path) -> list[str]:
+    problems = []
+    text = md_path.read_text()
+    for target in LINK_RE.findall(text):
+        if re.match(r"[a-z]+:", target):      # http:, https:, mailto:
+            continue
+        resolved = (md_path.parent / target).resolve()
+        if not resolved.exists():
+            problems.append(f"{md_path.name}: broken link -> {target}")
+    return problems
+
+
+def check_design_citations(design_path: Path) -> list[str]:
+    headings = set(HEADING_RE.findall(design_path.read_text()))
+    problems = []
+    for py in sorted((ROOT / "src").rglob("*.py")) + \
+            sorted((ROOT / "benchmarks").glob("*.py")):
+        for cite in CITE_RE.findall(py.read_text()):
+            if cite not in headings:
+                problems.append(
+                    f"{py.relative_to(ROOT)}: cites DESIGN.md {cite} "
+                    "but no such § heading exists")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    md_files = [Path(a) for a in argv] or [ROOT / "README.md",
+                                           ROOT / "DESIGN.md"]
+    problems: list[str] = []
+    for md in md_files:
+        if not md.exists():
+            problems.append(f"missing documentation file: {md}")
+            continue
+        problems += check_links(md)
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        problems += check_design_citations(design)
+    for p in problems:
+        print(f"[docs] {p}", file=sys.stderr)
+    if not problems:
+        print(f"[docs] OK: {', '.join(m.name for m in md_files)} links + "
+              "DESIGN.md § citations all resolve")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

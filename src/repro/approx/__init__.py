@@ -1,10 +1,11 @@
 from .quant import QuantParams, quantize, dequantize, calibrate
 from .registry import (Datapath, available_datapaths, get_datapath,
                        register_datapath)
-from .specs import (BackendSpec, MaterializedBackend, canonicalize,
-                    materialize, materialize_cache_stats,
+from .specs import (BackendSpec, LutBank, MaterializedBackend, bank_for,
+                    canonicalize, materialize, materialize_cache_stats,
                     clear_materialize_cache)
 from .backend import MatmulBackend, as_backend, backend_matmul
-from .layers import ApproxPolicy, spec_of
+from .layers import ApproxPolicy, bank_eval, spec_of
+from .resilience import BankableEval, can_bank
 from .dse import (DesignPoint, ExploreResult, explore, pareto_points,
                   select_multiplier)

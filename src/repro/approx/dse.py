@@ -22,7 +22,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from .layers import ApproxPolicy
-from .resilience import ResilienceRow, all_layers_sweep, per_layer_sweep
+from .resilience import (ResilienceRow, all_layers_sweep, can_bank,
+                         per_layer_sweep)
 from .specs import BackendSpec
 
 
@@ -122,6 +123,21 @@ def _cached_eval(eval_fn: Callable[[ApproxPolicy], float],
     return run
 
 
+def _seed_cache(cache: dict, rows: list[ResilienceRow], golden) -> None:
+    """Store batched-sweep results under the SAME policy cache keys the
+    sequential path would use, so later sequential (or widened)
+    explorations over the same cache dict hit instead of re-running."""
+    for r in rows:
+        if r.spec is None:
+            continue
+        if r.layer == "all":
+            policy = ApproxPolicy(default=r.spec)
+        else:
+            policy = ApproxPolicy(default=golden,
+                                  overrides=[(r.layer, r.spec)])
+        cache.setdefault(policy.cache_key(), r.accuracy)
+
+
 def explore(
     eval_fn: Callable[[ApproxPolicy], float],
     layer_counts: dict[str, int],
@@ -133,13 +149,36 @@ def explore(
     per_layer: bool = True,
     all_layers: bool = True,
     cache: Optional[dict] = None,
+    batch: bool = False,
+    sharding=None,
 ) -> ExploreResult:
     """One-call DSE: baseline + Table II + Fig. 4 sweeps over the
     library's case-study multipliers (or ``multipliers``), with cached
-    evaluations.  Pass the same ``cache`` dict across calls to resume or
-    widen an exploration without re-running finished points.  If
-    ``quality_bound`` is given, ``result.selected`` is the lowest-power
-    all-layers point within that accuracy drop."""
+    evaluations.
+
+    Sequential (default) evaluation runs one ``eval_fn`` call per design
+    point through a policy-keyed cache: pass the same ``cache`` dict
+    across calls to resume or widen an exploration without re-running
+    finished points.
+
+    ``batch=True`` switches to the batched resilience engine: the
+    multiplier axis is packed into a ``LutBank`` and each sweep runs as
+    O(1) compiled programs (`DESIGN.md §2.4`), bit-identical accuracies
+    to the sequential path.  Batching needs a
+    ``repro.approx.resilience.BankableEval`` (an eval with a traceable
+    core) and a bankable datapath (lut family); anything else — legacy
+    plain-callable evals, ``mode="lowrank"`` — silently falls back to
+    the sequential path, so ``batch=True`` is always safe to request.
+    A batched sweep evaluates the whole bank even on a warm cache (it
+    is one program, not n lookups) but writes every result back into
+    ``cache`` under sequential-compatible keys, so mixed
+    batched-then-sequential workflows never re-evaluate.  ``sharding``
+    optionally spreads the bank axis across devices
+    (``repro.launch.mesh.bank_sharding``).
+
+    If ``quality_bound`` is given, ``result.selected`` is the
+    lowest-power all-layers point within that accuracy drop.
+    """
     if library is None:
         from repro.core.library import get_default_library
         library = get_default_library()
@@ -147,18 +186,27 @@ def explore(
         multipliers = [e.name for e in library.case_study_selection()]
     cache = cache if cache is not None else {}
     run = _cached_eval(eval_fn, cache)
+    batch = batch and can_bank(eval_fn, mode, variant)
 
     golden = BackendSpec.golden().materialize()
     baseline = run(ApproxPolicy(default=golden))
 
     result = ExploreResult(baseline_accuracy=baseline)
     if all_layers:
-        rows = all_layers_sweep(run, layer_counts, multipliers, library,
-                                mode=mode, variant=variant)
+        rows = all_layers_sweep(eval_fn if batch else run, layer_counts,
+                                multipliers, library, mode=mode,
+                                variant=variant, batch=batch,
+                                sharding=sharding)
+        if batch:
+            _seed_cache(cache, rows, golden)
         result.all_layers = [DesignPoint.from_row(r) for r in rows]
     if per_layer:
-        rows = per_layer_sweep(run, layer_counts, multipliers, library,
-                               mode=mode, base=golden, variant=variant)
+        rows = per_layer_sweep(eval_fn if batch else run, layer_counts,
+                               multipliers, library, mode=mode,
+                               base=golden, variant=variant, batch=batch,
+                               sharding=sharding)
+        if batch:
+            _seed_cache(cache, rows, golden)
         result.per_layer = [DesignPoint.from_row(r) for r in rows]
     if quality_bound is not None and result.all_layers:
         result.selected = select_multiplier(result, quality_bound)

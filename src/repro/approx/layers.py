@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from .backend import BackendLike, MatmulBackend, as_backend, backend_matmul
-from .specs import BackendSpec, MaterializedBackend, canonicalize
+from .registry import get_datapath
+from .specs import BackendSpec, LutBank, MaterializedBackend, canonicalize
 
 
 def spec_of(backend: BackendLike) -> BackendSpec:
@@ -135,6 +136,76 @@ class ApproxPolicy:
 
 
 EXACT_POLICY = ApproxPolicy(default=MatmulBackend(mode="f32"))
+
+
+# ----------------------------------------------------------------------
+# Banked (vmapped) evaluation — the batched resilience engine's core
+# (DESIGN.md §2.4)
+# ----------------------------------------------------------------------
+def _bank_lane_backend(lut: jax.Array, bank: LutBank, mode: str,
+                       variant: str) -> MaterializedBackend:
+    """Backend for ONE vmap lane: a ``mode``-datapath backend whose LUT
+    const is a traced ``(256, 256)`` slice of the bank (any datapath
+    declaring ``bankable`` consumes ``consts['lut']`` this way).
+    ``ste=False`` because banked evaluation is forward-only — routing
+    around the custom_vjp wrapper keeps traced consts out of its
+    non-differentiable spec argument (the forward math is identical
+    either way)."""
+    dp = get_datapath(mode if variant == "ref" else f"{mode}_{variant}")
+    spec = BackendSpec(mode=mode, multiplier="<bank>",
+                       block_m=bank.block_m, ste=False, variant=variant)
+    return MaterializedBackend(spec=spec, datapath=dp,
+                               consts={"lut": lut, "block_m": bank.block_m})
+
+
+def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
+              variant: str = "ref",
+              base: Optional[BackendLike] = None,
+              layer_pattern: Optional[str] = None,
+              sharding=None):
+    """Evaluate ``fn(policy)`` for every multiplier in ``bank`` in ONE
+    compiled program (``jit(vmap(...))`` over the bank axis).
+
+    ``fn`` must be traceable (pure jax: arrays in, arrays out — no
+    ``float()``/numpy on traced values).  ``mode``/``variant`` select
+    the registered datapath the lanes run through (it must declare
+    ``bankable``; see ``repro.approx.resilience.can_bank``).  Lane ``i``
+    sees a policy whose swept entry emulates ``bank.names[i]``:
+
+      * ``layer_pattern=None`` — the banked backend is the policy
+        default (all-layers sweep, Table II);
+      * ``layer_pattern='s1_b0_conv1'`` — only that layer is banked and
+        the rest run ``base`` (per-layer sweep, Fig. 4; default golden
+        int8).
+
+    The bank axis threads through the model by vmap batching: layers
+    before the first banked matmul stay unbatched (computed once and
+    shared), everything downstream carries the lane axis.  Under the
+    ``pallas`` variant the custom batching rule of
+    ``repro.kernels.ops.approx_matmul_lut`` collapses the vmapped LUT
+    into the banked kernel, one grid step per multiplier.
+
+    ``sharding`` (an optional ``jax.sharding.Sharding`` for the
+    ``(n_mult, 256, 256)`` bank) places lanes across devices; see
+    ``repro.launch.mesh.bank_sharding``.  Returns ``fn``'s output
+    stacked along a new leading ``n_mult`` axis.
+    """
+    luts = jnp.asarray(bank.luts)
+    if sharding is not None:
+        luts = jax.device_put(luts, sharding)
+    if layer_pattern is not None and base is None:
+        base = BackendSpec.golden().materialize()
+
+    def lane(lut):
+        mb = _bank_lane_backend(lut, bank, mode, variant)
+        if layer_pattern is None:
+            policy = ApproxPolicy(default=mb)
+        else:
+            policy = ApproxPolicy(default=base,
+                                  overrides=[(layer_pattern, mb)])
+        return fn(policy)
+
+    return jax.jit(jax.vmap(lane))(luts)
 
 
 def dense(policy: ApproxPolicy, name: str, x: jax.Array, w: jax.Array,

@@ -49,6 +49,10 @@ class Datapath:
     # fields outside this set are canonicalized away in cache keys so
     # equivalent configurations share one materialization + jit trace.
     spec_fields: tuple = ("multiplier", "rank", "block_m")
+    # True when forward_q stays correct (and efficient) with a vmapped
+    # per-multiplier LUT const — the batched resilience engine only
+    # banks datapaths that declare it (DESIGN.md §2.4).
+    bankable: bool = False
 
     def pack(self, spec, library) -> dict:
         return {}
@@ -143,6 +147,7 @@ class LutDatapath(Datapath):
     """Blocked bit-true LUT matmul on codes. (M,K) x (K,N) -> (M,N) i32."""
 
     spec_fields = ("multiplier", "block_m")
+    bankable = True
 
     def pack(self, spec, library) -> dict:
         return pack_lut(spec, library)

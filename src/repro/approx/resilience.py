@@ -11,7 +11,14 @@ datapath, the paper's golden reference.
 Backends are built spec-first: each multiplier name becomes a
 ``BackendSpec`` materialized once against the library, so every policy
 the sweep evaluates shares the same backend objects (one jit trace per
-multiplier instead of one per policy instance).  The ``explore()``
+multiplier instead of one per policy instance).
+
+Both sweeps also run **batched** (``batch=True``): the multiplier axis
+is packed into a ``LutBank`` and evaluated under ``jax.vmap`` in O(1)
+compiled programs per sweep (one for all-layers, one per layer for
+per-layer) instead of O(n_mult) traces — bit-identical accuracies to
+the sequential path (DESIGN.md §2.4).  Batching requires a traceable
+evaluation function; wrap yours in ``BankableEval``.  The ``explore()``
 facade in ``repro.approx.dse`` wraps both sweeps with result caching
 and Pareto selection.
 """
@@ -20,10 +27,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+import numpy as np
+
 from .backend import BackendLike
-from .layers import ApproxPolicy
+from .layers import ApproxPolicy, bank_eval
 from .power import LayerPower, network_relative_power
-from .specs import BackendSpec, MaterializedBackend
+from .registry import get_datapath
+from .specs import BackendSpec, MaterializedBackend, bank_for
 
 
 @dataclass
@@ -38,6 +48,42 @@ class ResilienceRow:
     spec: Optional[BackendSpec] = None
 
 
+@dataclass
+class BankableEval:
+    """An evaluation function in both calling conventions the sweeps
+    understand.
+
+    ``fn(policy) -> float`` is the sequential closure (free to jit
+    internally, call numpy, return a Python float).  ``traceable`` is
+    its pure-jax core — arrays in, a scalar accuracy array out, no
+    side effects — which the batched engine wraps in ``jit(vmap(...))``
+    over the multiplier bank.  The two must compute the same number for
+    the same policy; the batched path is then bit-identical to the
+    sequential one by construction.  Calling the object delegates to
+    ``fn``, so a ``BankableEval`` drops into every sequential call site
+    unchanged.
+    """
+
+    fn: Callable[[ApproxPolicy], float]
+    traceable: Callable[[ApproxPolicy], "object"]
+
+    def __call__(self, policy: ApproxPolicy) -> float:
+        return self.fn(policy)
+
+
+def can_bank(eval_fn, mode: str, variant: str = "ref") -> bool:
+    """True when ``(eval_fn, mode, variant)`` supports the batched
+    engine: the eval exposes a traceable core and the datapath declares
+    ``bankable`` (lut-family; lowrank/int8 do not bank)."""
+    if getattr(eval_fn, "traceable", None) is None:
+        return False
+    name = mode if variant == "ref" else f"{mode}_{variant}"
+    try:
+        return bool(get_datapath(name).bankable)
+    except KeyError:
+        return False
+
+
 def _backends_for(multiplier_names, library, mode: str, rank=None,
                   variant: str = "ref") -> dict[str, MaterializedBackend]:
     out = {}
@@ -48,6 +94,26 @@ def _backends_for(multiplier_names, library, mode: str, rank=None,
     return out
 
 
+def _row(library, mname, layer, acc, layer_counts, spec) -> ResilienceRow:
+    entry = library.entries[mname]
+    total = sum(layer_counts.values())
+    if layer == "all":
+        return ResilienceRow(
+            multiplier=mname, layer="all", accuracy=acc,
+            network_rel_power=entry.rel_power,
+            multiplier_rel_power=entry.rel_power,
+            mult_share=1.0, errors=entry.errors.as_dict(), spec=spec)
+    pw = [LayerPower(l, c, mname if l == layer else "exact",
+                     entry.rel_power if l == layer else 1.0)
+          for l, c in layer_counts.items()]
+    return ResilienceRow(
+        multiplier=mname, layer=layer, accuracy=acc,
+        network_rel_power=network_relative_power(pw),
+        multiplier_rel_power=entry.rel_power,
+        mult_share=layer_counts[layer] / total,
+        errors=entry.errors.as_dict(), spec=spec)
+
+
 def per_layer_sweep(
     eval_fn: Callable[[ApproxPolicy], float],
     layer_counts: dict[str, int],
@@ -56,29 +122,42 @@ def per_layer_sweep(
     mode: str = "lut",
     base: Optional[BackendLike] = None,
     variant: str = "ref",
+    batch: bool = False,
+    sharding=None,
 ) -> list[ResilienceRow]:
-    """Fig. 4: one layer approximated at a time."""
+    """Fig. 4: one layer approximated at a time.
+
+    Sequential (default): one ``eval_fn`` call — and typically one jit
+    trace — per (layer, multiplier) pair.  Batched (``batch=True``,
+    requires a ``BankableEval``): the multiplier axis is packed into a
+    ``LutBank`` and each layer evaluates ALL candidates in one compiled
+    program — O(n_layers) programs total instead of
+    O(n_layers * n_mult).  Accuracies are bit-identical between the two
+    paths; ``sharding`` optionally spreads the bank axis across devices
+    (``repro.launch.mesh.bank_sharding``).
+    """
     base = base if base is not None else BackendSpec.golden().materialize()
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
-    total = sum(layer_counts.values())
     rows = []
-    for layer, count in layer_counts.items():
+    if batch:
+        traceable = _require_bankable(eval_fn, mode, variant)
+        bank = bank_for(multiplier_names, library)
+        for layer in layer_counts:
+            accs = np.asarray(bank_eval(traceable, bank, mode=mode,
+                                        variant=variant, base=base,
+                                        layer_pattern=layer,
+                                        sharding=sharding))
+            for mname, acc in zip(multiplier_names, accs):
+                rows.append(_row(library, mname, layer, float(acc),
+                                 layer_counts, backends[mname].spec))
+        return rows
+    for layer in layer_counts:
         for mname, be in backends.items():
             policy = ApproxPolicy(default=base, overrides=[(layer, be)])
             acc = float(eval_fn(policy))
-            entry = library.entries[mname]
-            pw = [LayerPower(l, c, mname if l == layer else "exact",
-                             entry.rel_power if l == layer else 1.0)
-                  for l, c in layer_counts.items()]
-            rows.append(ResilienceRow(
-                multiplier=mname, layer=layer, accuracy=acc,
-                network_rel_power=network_relative_power(pw),
-                multiplier_rel_power=entry.rel_power,
-                mult_share=count / total,
-                errors=entry.errors.as_dict(),
-                spec=be.spec,
-            ))
+            rows.append(_row(library, mname, layer, acc, layer_counts,
+                             be.spec))
     return rows
 
 
@@ -89,21 +168,44 @@ def all_layers_sweep(
     library,
     mode: str = "lut",
     variant: str = "ref",
+    batch: bool = False,
+    sharding=None,
 ) -> list[ResilienceRow]:
-    """Table II: the same multiplier in every (conv) layer."""
+    """Table II: the same multiplier in every (conv) layer.
+
+    Sequential (default): one ``eval_fn`` call per multiplier.  Batched
+    (``batch=True``, requires a ``BankableEval``): ONE compiled program
+    evaluates the whole ``LutBank`` — O(1) traces/compiles regardless
+    of ``len(multiplier_names)``, bit-identical accuracies to the
+    sequential path.  ``sharding`` optionally spreads the bank axis
+    across devices.
+    """
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
+    if batch:
+        traceable = _require_bankable(eval_fn, mode, variant)
+        bank = bank_for(multiplier_names, library)
+        accs = np.asarray(bank_eval(traceable, bank, mode=mode,
+                                    variant=variant, sharding=sharding))
+        return [_row(library, mname, "all", float(acc), layer_counts,
+                     backends[mname].spec)
+                for mname, acc in zip(multiplier_names, accs)]
     rows = []
     for mname, be in backends.items():
         policy = ApproxPolicy(default=be)
         acc = float(eval_fn(policy))
-        entry = library.entries[mname]
-        rows.append(ResilienceRow(
-            multiplier=mname, layer="all", accuracy=acc,
-            network_rel_power=entry.rel_power,
-            multiplier_rel_power=entry.rel_power,
-            mult_share=1.0,
-            errors=entry.errors.as_dict(),
-            spec=be.spec,
-        ))
+        rows.append(_row(library, mname, "all", acc, layer_counts,
+                         be.spec))
     return rows
+
+
+def _require_bankable(eval_fn, mode: str, variant: str):
+    if not can_bank(eval_fn, mode, variant):
+        raise ValueError(
+            "batch=True needs a BankableEval (an eval_fn with a "
+            "traceable core) and a bankable datapath; "
+            f"got {type(eval_fn).__name__} with mode={mode!r} "
+            f"variant={variant!r}.  Wrap your eval in BankableEval or "
+            "use explore(batch=True), which falls back to the "
+            "sequential path.")
+    return eval_fn.traceable

@@ -22,6 +22,8 @@ from collections import OrderedDict
 from dataclasses import asdict, dataclass, field, replace
 from typing import Any, Mapping, Optional
 
+import numpy as np
+
 from .registry import Datapath, get_datapath
 
 _EXACT_MODES = ("f32", "bf16")
@@ -102,6 +104,11 @@ class BackendSpec:
 
     # -- materialization ------------------------------------------------
     def materialize(self, library=None) -> "MaterializedBackend":
+        """Bind to ``library`` through the process-wide LRU cache: equal
+        (canonicalized) specs get the SAME backend object back, which is
+        what lets sequential sweeps share one jit trace per multiplier.
+        Batched sweeps bypass per-spec materialization entirely — the
+        whole candidate axis packs into one ``LutBank`` instead."""
         return materialize(self, library)
 
 
@@ -150,6 +157,8 @@ def _evict_library(lid: int) -> None:
     _FINALIZED.discard(lid)
     for k in [k for k in _CACHE if k[0] == lid]:
         del _CACHE[k]
+    for k in [k for k in _BANK_CACHE if k[0] == lid]:
+        del _BANK_CACHE[k]
 
 
 def _library_key(library) -> int:
@@ -214,6 +223,78 @@ def materialize(spec: BackendSpec, library=None) -> MaterializedBackend:
     while len(_CACHE) > _CACHE_MAX:
         _CACHE.popitem(last=False)
     return mb
+
+
+# ----------------------------------------------------------------------
+# LutBank: the library axis as one device constant (DESIGN.md §2.4)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True, eq=False)  # id-hash: cache guarantees uniqueness
+class LutBank:
+    """A stack of product LUTs — the *multiplier axis* of a resilience
+    sweep packed as one ``(n_mult, 256, 256)`` int32 device constant.
+
+    Banks are what the batched resilience engine vmaps over: lane ``i``
+    of a banked evaluation runs the model with ``luts[i]`` in every (or
+    one) layer, bit-identical to materializing ``specs[i]`` and
+    evaluating sequentially.  Build through ``bank_for`` to share banks
+    across sweeps of the same (library, names, block_m) — the bank
+    analogue of the per-spec materialization cache.
+    """
+
+    names: tuple[str, ...]
+    luts: np.ndarray                  # (n_mult, 256, 256) int32
+    block_m: int = 512
+
+    def __post_init__(self):
+        if self.luts.ndim != 3 or self.luts.shape[1:] != (256, 256):
+            raise ValueError(
+                f"LutBank wants (n, 256, 256) LUTs, got {self.luts.shape}"
+                " — banked sweeps are defined for 8-bit multipliers")
+        if len(self.names) != self.luts.shape[0]:
+            raise ValueError("one name per LUT slice required")
+
+    @property
+    def n_mult(self) -> int:
+        return len(self.names)
+
+    def spec(self, i: int, mode: str = "lut",
+             variant: str = "ref") -> BackendSpec:
+        """The serializable spec lane ``i`` of a banked sweep stands for."""
+        return BackendSpec(mode=mode, multiplier=self.names[i],
+                           block_m=self.block_m, variant=variant)
+
+    @staticmethod
+    def from_library(names, library=None, block_m: int = 512) -> "LutBank":
+        if library is None:
+            from repro.core.library import get_default_library
+            library = get_default_library()
+        names = tuple(names)
+        luts = np.stack([np.asarray(library.lut(n), dtype=np.int32)
+                         for n in names])
+        return LutBank(names=names, luts=luts, block_m=block_m)
+
+
+_BANK_CACHE: "OrderedDict[tuple, LutBank]" = OrderedDict()
+_BANK_CACHE_MAX = 16
+
+
+def bank_for(names, library=None, block_m: int = 512) -> LutBank:
+    """LRU-cached ``LutBank.from_library``: repeated sweeps over the
+    same candidate set (all-layers then per-layer, or explore() called
+    twice) reuse one packed bank instead of restacking LUTs."""
+    if library is None:
+        from repro.core.library import get_default_library
+        library = get_default_library()
+    key = (_library_key(library), tuple(names), int(block_m))
+    hit = _BANK_CACHE.get(key)
+    if hit is not None:
+        _BANK_CACHE.move_to_end(key)
+        return hit
+    bank = LutBank.from_library(names, library, block_m=block_m)
+    _BANK_CACHE[key] = bank
+    while len(_BANK_CACHE) > _BANK_CACHE_MAX:
+        _BANK_CACHE.popitem(last=False)
+    return bank
 
 
 def materialize_cache_stats() -> dict:

@@ -7,7 +7,7 @@ reference activity, delay) triple loosely modeled on a 45 nm standard-cell
 library (NanGate45-like relative magnitudes).  The paper reports circuit
 power *relative to the exact multiplier*, so only the relative magnitudes
 of these numbers matter for the methodology; we document them here as the
-framework's deterministic cost model (DESIGN.md §4b).
+framework's deterministic cost model (DESIGN.md §4.4).
 """
 from __future__ import annotations
 

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: bit-true LUT-gather approximate matmul.
 
 TPU-native port of TFApprox's GPU texture-LUT emulation (DESIGN.md
-§4.1): the full 256x256 int32 product LUT (256 KiB) is pinned in VMEM
+§4.5): the full 256x256 int32 product LUT (256 KiB) is pinned in VMEM
 for every grid step; operand tiles stream HBM -> VMEM per BlockSpec;
 products are vector gathers on the VPU with exact int32 accumulation —
 bit-identical to the gate-level netlist, which is what a resilience

@@ -19,9 +19,15 @@ from .ops import approx_matmul_lut, lowrank_matmul
 
 @register_datapath("lut_pallas")
 class LutPallasDatapath(Datapath):
-    """Bit-true LUT emulation through the Pallas texture-gather kernel."""
+    """Bit-true LUT emulation through the Pallas texture-gather kernel.
+
+    Bankable: under the batched engine's vmap, ``approx_matmul_lut``'s
+    custom batching rule reroutes the whole LUT bank to the banked
+    kernel (``lut_bank.py``, grid over the multiplier axis) instead of
+    batching the single-LUT kernel rank-by-rank."""
 
     spec_fields = ("multiplier",)   # kernel does its own blocking
+    bankable = True
 
     def pack(self, spec, library) -> dict:
         return pack_lut(spec, library)

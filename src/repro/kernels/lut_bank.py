@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: banked bit-true LUT-gather approximate matmul.
+
+The batched-resilience primitive (DESIGN.md §2.4, §4.5): evaluate the
+SAME operand matmul under ``n_mult`` different approximate multipliers
+in one kernel launch.  The bank of product LUTs is stacked as
+``(n_mult, 256, 256)`` int32 and the grid gets a leading *multiplier*
+dimension — each program pins exactly ONE 256 KiB LUT slice in VMEM
+(never the whole bank), so VMEM stays flat in ``n_mult``:
+
+  VMEM ≈ lut_slice(256K) + a(bm*bk*4) + w(bk*bn*4)
+       + cube(bm*K_CHUNK*bn*4)
+       ≈ 0.25 + 0.0625 + 0.0625 + 0.5 MiB   for 128/128/128 tiles,
+  identical to the single-LUT kernel's budget (DESIGN.md §4.5).
+
+Activations may be *banked* too: after the first approximated layer of
+a swept network the per-multiplier activations diverge, so ``qa`` is
+accepted as either ``(M, K)`` (shared codes, first layer / weight-only
+divergence) or ``(n_mult, M, K)``; the index map simply reuses the bank
+grid coordinate for banked operands and ignores it for shared ones.
+
+The per-bank result is bit-identical to running the single-LUT kernel
+(`approx_matmul.py`) once per multiplier — the equivalence contract the
+batched resilience engine relies on (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .approx_matmul import BK, BM, BN, K_CHUNK
+
+
+def _kernel(a_ref, w_ref, lut_ref, o_ref):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].reshape(-1, a_ref.shape[-1])   # (BM, BK) int32 codes
+    w = w_ref[...]                                # (BK, BN) int32 codes
+    lut = lut_ref[...].reshape(-1)                # (65536,) one bank slice
+
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice(a, (0, c * K_CHUNK),
+                                    (a.shape[0], K_CHUNK))
+        w_c = jax.lax.dynamic_slice(w, (c * K_CHUNK, 0),
+                                    (K_CHUNK, w.shape[1]))
+        idx = a_c[:, :, None] * 256 + w_c[None, :, :]       # (BM,KC,BN)
+        prods = jnp.take(lut, idx, axis=0)                   # VPU gather
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+    nk = a.shape[1] // K_CHUNK
+    acc = jax.lax.fori_loop(
+        0, nk, body, jnp.zeros((a.shape[0], w.shape[1]), jnp.int32))
+    o_ref[...] += acc[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def approx_matmul_lut_bank_pallas(qa: jax.Array, qw: jax.Array,
+                                  luts: jax.Array,
+                                  interpret: bool = False) -> jax.Array:
+    """qa: (M,K) or (n,M,K) int32 in [0,255]; qw: (K,N) int32;
+    luts: (n,256,256) int32.  Returns (n,M,N) int32 where
+    ``out[b] = Σ_k luts[b][qa_b, qw]`` (``qa_b = qa`` when shared).
+
+    Grid is (n, M/BM, N/BN, K/BK) with one VMEM-pinned LUT slice per
+    program; the K-padding contribution (pad rows hit LUT[b,0,0]) is
+    subtracted exactly per bank.
+    """
+    banked_a = qa.ndim == 3
+    n_mult = luts.shape[0]
+    m, k = qa.shape[-2:]
+    k2, n = qw.shape
+    assert k == k2
+    assert not banked_a or qa.shape[0] == n_mult
+    pm, pn, pk = (-m) % BM, (-n) % BN, (-k) % BK
+    a_pad = ((0, 0), (0, pm), (0, pk)) if banked_a else ((0, pm), (0, pk))
+    qa_p = jnp.pad(qa, a_pad)
+    qw_p = jnp.pad(qw, ((0, pk), (0, pn)))
+    flat = luts.reshape(n_mult, -1)
+    grid = (n_mult, qa_p.shape[-2] // BM, qw_p.shape[1] // BN,
+            qa_p.shape[-1] // BK)
+    if banked_a:
+        a_spec = pl.BlockSpec((1, BM, BK), lambda b, i, j, s: (b, i, s))
+    else:
+        a_spec = pl.BlockSpec((BM, BK), lambda b, i, j, s: (i, s))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            a_spec,
+            pl.BlockSpec((BK, BN), lambda b, i, j, s: (s, j)),
+            pl.BlockSpec((1, 65536), lambda b, i, j, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BM, BN), lambda b, i, j, s: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_mult, qa_p.shape[-2], qw_p.shape[1]), jnp.int32),
+        interpret=interpret,
+    )(qa_p, qw_p, flat)
+    out = out[:, :m, :n]
+    if pk:
+        # pad rows contribute pk * LUT[b,0,0] to every output element
+        out = out - jnp.int32(pk) * flat[:, 0][:, None, None]
+    return out

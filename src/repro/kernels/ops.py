@@ -7,10 +7,12 @@ the ``ref.py`` oracles.  On a TPU backend the same calls lower to Mosaic.
 from __future__ import annotations
 
 import jax
+import jax.custom_batching
 import jax.numpy as jnp
 import numpy as np
 
 from .approx_matmul import approx_matmul_lut_pallas
+from .lut_bank import approx_matmul_lut_bank_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
 from .bitsim import bitsim_pallas
 
@@ -19,10 +21,44 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@jax.custom_batching.custom_vmap
 def approx_matmul_lut(qa: jax.Array, qw: jax.Array, lut: jax.Array
                       ) -> jax.Array:
-    """Bit-true approximate matmul on uint8 codes. (M,K)x(K,N)->(M,N) i32."""
+    """Bit-true approximate matmul on uint8 codes. (M,K)x(K,N)->(M,N) i32.
+
+    ``vmap`` over the LUT argument does NOT fall back to rank-by-rank
+    batching: a custom batching rule reroutes the whole batch to the
+    banked kernel (grid over the multiplier axis), which is how the
+    batched resilience engine turns an n-multiplier sweep into one
+    launch (DESIGN.md §2.4).
+    """
     return approx_matmul_lut_pallas(qa, qw, lut, interpret=_interpret())
+
+
+@approx_matmul_lut.def_vmap
+def _approx_matmul_lut_vmap(axis_size, in_batched, qa, qw, lut):
+    qa_b, qw_b, lut_b = in_batched
+    if qw_b:
+        # batched weights (e.g. experts vmapping backend_matmul) are not
+        # a LUT bank: keep pallas_call's native parallel batching rule.
+        out = jax.vmap(
+            lambda a, w, l: approx_matmul_lut_pallas(
+                a, w, l, interpret=_interpret()),
+            in_axes=(0 if qa_b else None, 0, 0 if lut_b else None),
+        )(qa, qw, lut)
+        return out, True
+    luts = lut if lut_b else jnp.broadcast_to(lut, (axis_size,) + lut.shape)
+    out = approx_matmul_lut_bank(qa, qw, luts)
+    return out, True
+
+
+def approx_matmul_lut_bank(qa: jax.Array, qw: jax.Array, luts: jax.Array
+                           ) -> jax.Array:
+    """Banked bit-true matmul: one launch for a whole LUT bank.
+    qa: (M,K) shared or (n,M,K) banked codes; luts: (n,256,256)
+    -> (n,M,N) i32, bit-identical per bank to ``approx_matmul_lut``."""
+    return approx_matmul_lut_bank_pallas(qa, qw, luts,
+                                         interpret=_interpret())
 
 
 def lowrank_matmul(qa: jax.Array, qw: jax.Array, u: jax.Array, v: jax.Array

@@ -20,6 +20,18 @@ def approx_matmul_lut_ref(qa: jax.Array, qw: jax.Array, lut: jax.Array
     return jnp.sum(jnp.take(flat, idx, axis=0), axis=1, dtype=jnp.int32)
 
 
+def approx_matmul_lut_bank_ref(qa: jax.Array, qw: jax.Array,
+                               luts: jax.Array) -> jax.Array:
+    """Banked oracle: out[b] = Σ_k luts[b][qa_b, qw] with int32
+    accumulation.  qa: (M,K) shared codes or (n,M,K) banked codes;
+    qw: (K,N); luts: (n,256,256) int32 -> (n,M,N) int32."""
+    if qa.ndim == 2:
+        return jax.vmap(lambda lut: approx_matmul_lut_ref(qa, qw, lut)
+                        )(luts)
+    return jax.vmap(lambda qa_b, lut: approx_matmul_lut_ref(qa_b, qw, lut)
+                    )(qa, luts)
+
+
 def lowrank_matmul_ref(qa: jax.Array, qw: jax.Array, u: jax.Array,
                        v: jax.Array) -> jax.Array:
     """Σ_r tableU_r(qa) @ tableV_r(qw), f32. u,v: (R,256) f32."""

@@ -219,3 +219,40 @@ def batch_shardings(batch_shapes, mesh: Mesh, microbatched: bool = False):
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# Batched-sweep (library-axis) sharding — DESIGN.md §2.4
+# ----------------------------------------------------------------------
+def sweep_mesh(max_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh over the local devices for sharding a resilience
+    sweep's *candidate* (multiplier-bank) axis.  Unlike the training
+    mesh this is shape-agnostic: every device is data-parallel over
+    bank lanes."""
+    devs = jax.devices()
+    if max_devices is not None:
+        devs = devs[:max_devices]
+    return Mesh(np.asarray(devs), ("sweep",))
+
+
+def bank_pspec(n_banks: int, mesh: Mesh, axis: str = "sweep") -> P:
+    """PartitionSpec for a ``(n_banks, 256, 256)`` LutBank (or any
+    candidate-leading array): shard the leading axis across ``axis``
+    when divisible, else replicate — same divisibility policy as the
+    parameter rules above."""
+    if axis in mesh.axis_names and _fits(n_banks, axis_size(mesh, axis)):
+        return P(axis)
+    return P()
+
+
+def bank_sharding(n_banks: int, mesh: Optional[Mesh] = None,
+                  axis: str = "sweep") -> NamedSharding:
+    """Sharding for the batched resilience engine's bank axis; pass the
+    result as ``bank_eval(..., sharding=...)`` /
+    ``explore(..., sharding=...)``.  With a default 1-D ``sweep_mesh``
+    each device evaluates ``n_banks / n_devices`` multipliers of the
+    sweep; XLA partitions the whole vmapped program along the lane
+    axis, so activations and per-lane accuracies never materialize on
+    one device."""
+    mesh = mesh if mesh is not None else sweep_mesh()
+    return NamedSharding(mesh, bank_pspec(n_banks, mesh, axis))

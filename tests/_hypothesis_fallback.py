@@ -7,8 +7,8 @@ sees this).  Property tests then run a small fixed set of samples:
 both endpoints plus seeded-random interior draws — strictly weaker than
 real hypothesis, but the invariants still execute.
 
-Covers exactly the API surface this repo uses:
-``given``, ``settings``, ``strategies.integers``, ``strategies.floats``.
+Covers exactly the API surface this repo uses: ``given``, ``settings``,
+``strategies.integers``, ``strategies.floats``, ``strategies.booleans``.
 """
 from __future__ import annotations
 
@@ -39,6 +39,17 @@ def integers(min_value, max_value) -> _Strategy:
 
 def floats(min_value, max_value) -> _Strategy:
     return _Strategy(float(min_value), float(max_value), float)
+
+
+class _BoolStrategy:
+    def draw(self, rng: random.Random, i: int):
+        if i < 2:
+            return bool(i)
+        return bool(rng.getrandbits(1))
+
+
+def booleans() -> _BoolStrategy:
+    return _BoolStrategy()
 
 
 def given(*strats: _Strategy):
@@ -73,6 +84,7 @@ def build_module() -> ModuleType:
     strategies = ModuleType("hypothesis.strategies")
     strategies.integers = integers
     strategies.floats = floats
+    strategies.booleans = booleans
     mod.strategies = strategies
     mod.HealthCheck = SimpleNamespace()   # occasionally referenced
     mod.__fallback__ = True

@@ -40,6 +40,60 @@ def test_lut_kernel_real_multipliers(mult):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 140), st.integers(1, 150), st.integers(1, 140),
+       st.integers(1, 4), st.booleans())
+def test_lut_bank_kernel_matches_ref(m, k, n, n_mult, banked_qa):
+    qa, qw = _codes(m, k, n)
+    if banked_qa:
+        qa = jnp.asarray(RNG.integers(0, 256, (n_mult, m, k)), jnp.int32)
+    luts = jnp.asarray(RNG.integers(0, 255 * 255, (n_mult, 256, 256)),
+                       jnp.int32)
+    got = ops.approx_matmul_lut_bank(qa, qw, luts)
+    want = ref.approx_matmul_lut_bank_ref(qa, qw, luts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_bank_lane_matches_single_lut_kernel():
+    """Equivalence contract: bank lane b == single-LUT kernel with
+    luts[b] (what the batched resilience engine relies on)."""
+    qa, qw = _codes(70, 130, 50)
+    luts = jnp.asarray(RNG.integers(0, 255 * 255, (3, 256, 256)),
+                       jnp.int32)
+    bank = np.asarray(ops.approx_matmul_lut_bank(qa, qw, luts))
+    for b in range(3):
+        single = np.asarray(ops.approx_matmul_lut(qa, qw, luts[b]))
+        np.testing.assert_array_equal(bank[b], single)
+
+
+def test_lut_kernel_vmap_dispatches_to_bank():
+    """vmap over the LUT axis must reroute to the banked kernel (one
+    launch), not batch the single-LUT kernel lane by lane."""
+    import jax
+
+    qa, qw = _codes(40, 64, 24)
+    luts = jnp.asarray(RNG.integers(0, 255 * 255, (4, 256, 256)),
+                       jnp.int32)
+    got = jax.vmap(lambda lut: ops.approx_matmul_lut(qa, qw, lut))(luts)
+    want = ref.approx_matmul_lut_bank_ref(qa, qw, luts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_kernel_vmap_batched_weights():
+    """Batched weights (experts vmapping backend_matmul, NOT a LUT
+    bank) stay correct through the custom batching rule."""
+    import jax
+
+    qa = jnp.asarray(RNG.integers(0, 256, (3, 20, 40)), jnp.int32)
+    qw = jnp.asarray(RNG.integers(0, 256, (3, 40, 24)), jnp.int32)
+    lut = jnp.asarray(RNG.integers(0, 255 * 255, (256, 256)), jnp.int32)
+    got = jax.vmap(lambda a, w: ops.approx_matmul_lut(a, w, lut))(qa, qw)
+    want = np.stack([np.asarray(ref.approx_matmul_lut_ref(qa[i], qw[i],
+                                                          lut))
+                     for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
 @settings(max_examples=6, deadline=None)
 @given(st.integers(1, 130), st.integers(1, 140), st.integers(1, 130),
        st.integers(1, 6))

@@ -1,0 +1,167 @@
+"""Batched resilience engine: bank equivalence + trace counting.
+
+The contract under test (DESIGN.md §2.4): a ``batch=True`` sweep over a
+``LutBank`` returns bit-identical ``ResilienceRow`` accuracies to the
+sequential per-policy path, while compiling O(1) programs instead of
+O(n_mult)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.dse import explore
+from repro.approx.layers import ApproxPolicy, bank_eval
+from repro.approx.resilience import (BankableEval, all_layers_sweep,
+                                     can_bank, per_layer_sweep)
+from repro.approx.specs import BackendSpec, LutBank, bank_for
+from repro.core.library import build_default_library
+from repro.data.synthetic import CifarBatches
+from repro.models import resnet
+
+MULTS = ["mul8u_exact", "mul8u_trunc4", "mul8u_trunc2"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return build_default_library("tiny")
+
+
+@pytest.fixture(scope="module")
+def resnet_eval(lib):
+    """Small ResNet-8 eval on the seed library subset, instrumented to
+    count jax traces of its core."""
+    cfg = resnet.resnet_config(8)
+    params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+    data = CifarBatches("test", 32, 32, seed=0)
+    batch = next(iter(data.eval_batches()))
+    images = jnp.asarray(batch["images"])
+    labels = jnp.asarray(batch["labels"])
+    traces = []
+
+    def traceable(policy):
+        traces.append(1)          # runs once per jax trace, not per eval
+        logits = resnet.forward(params, images, cfg, policy)
+        return jnp.mean((jnp.argmax(logits, -1) == labels
+                         ).astype(jnp.float32))
+
+    def fn(policy):
+        return float(jax.jit(lambda: traceable(policy))())
+
+    return cfg, BankableEval(fn=fn, traceable=traceable), traces
+
+
+def test_all_layers_batched_bit_identical_and_one_trace(lib, resnet_eval):
+    cfg, eval_fn, traces = resnet_eval
+    counts = resnet.layer_mult_counts(cfg)
+    seq = all_layers_sweep(eval_fn, counts, MULTS, lib, mode="lut")
+    traces.clear()
+    bat = all_layers_sweep(eval_fn, counts, MULTS, lib, mode="lut",
+                           batch=True)
+    assert len(traces) == 1, "batched sweep must compile O(1) programs"
+    assert [r.multiplier for r in bat] == [r.multiplier for r in seq]
+    assert [r.accuracy for r in bat] == [r.accuracy for r in seq]
+    for s, b in zip(seq, bat):
+        assert s.network_rel_power == b.network_rel_power
+        assert s.spec == b.spec and s.errors == b.errors
+
+
+def test_per_layer_batched_bit_identical(lib, resnet_eval):
+    cfg, eval_fn, traces = resnet_eval
+    counts = dict(list(resnet.layer_mult_counts(cfg).items())[:2])
+    seq = per_layer_sweep(eval_fn, counts, MULTS[:2], lib, mode="lut")
+    traces.clear()
+    bat = per_layer_sweep(eval_fn, counts, MULTS[:2], lib, mode="lut",
+                          batch=True)
+    assert len(traces) == len(counts), "one program per layer"
+    assert [(r.multiplier, r.layer, r.accuracy) for r in bat] \
+        == [(r.multiplier, r.layer, r.accuracy) for r in seq]
+    assert [r.mult_share for r in bat] == [r.mult_share for r in seq]
+
+
+def test_batch_requires_bankable_eval(lib):
+    with pytest.raises(ValueError, match="BankableEval"):
+        all_layers_sweep(lambda p: 0.5, {"a": 1}, MULTS, lib,
+                         mode="lut", batch=True)
+    assert not can_bank(lambda p: 0.5, "lut")
+    assert not can_bank(BankableEval(fn=lambda p: 0.5,
+                                     traceable=lambda p: jnp.float32(0.5)),
+                        "lowrank")
+
+
+def test_explore_batch_matches_sequential_and_seeds_cache(lib, resnet_eval):
+    cfg, eval_fn, _ = resnet_eval
+    counts = dict(list(resnet.layer_mult_counts(cfg).items())[:2])
+    res_seq = explore(eval_fn, counts, lib, multipliers=MULTS[:2],
+                      mode="lut")
+    cache: dict = {}
+    res_bat = explore(eval_fn, counts, lib, multipliers=MULTS[:2],
+                      mode="lut", batch=True, cache=cache)
+    assert res_bat.baseline_accuracy == res_seq.baseline_accuracy
+    assert [(p.multiplier, p.layer, p.accuracy)
+            for p in res_bat.all_layers + res_bat.per_layer] \
+        == [(p.multiplier, p.layer, p.accuracy)
+            for p in res_seq.all_layers + res_seq.per_layer]
+    # batched results were seeded into the cache under sequential keys:
+    # a sequential re-exploration over the same cache runs zero evals.
+    calls = [0]
+
+    def counting(policy):
+        calls[0] += 1
+        return 0.0
+
+    explore(counting, counts, lib, multipliers=MULTS[:2], mode="lut",
+            cache=cache)
+    assert calls[0] == 0
+
+
+def test_explore_batch_falls_back_when_not_bankable(lib):
+    """batch=True with a plain callable (or unbankable mode) silently
+    uses the sequential path — same results, no error."""
+    calls = [0]
+    x = jnp.asarray(np.linspace(-1, 1, 64).reshape(8, 8), jnp.float32)
+    w = jnp.asarray(np.eye(8), jnp.float32)
+
+    def eval_fn(policy):
+        calls[0] += 1
+        return float(jnp.mean(policy.matmul("a", x, w)))
+
+    res = explore(eval_fn, {"a": 10}, lib, multipliers=MULTS,
+                  mode="lut", per_layer=False, batch=True)
+    assert calls[0] == 1 + len(MULTS)      # baseline + one per multiplier
+    assert len(res.all_layers) == len(MULTS)
+
+
+def test_lut_bank_construction_and_cache(lib):
+    bank = bank_for(MULTS, lib)
+    assert bank.n_mult == len(MULTS) and bank.luts.shape == (3, 256, 256)
+    assert bank_for(MULTS, lib) is bank, "bank cache must dedupe"
+    assert bank_for(MULTS[:2], lib) is not bank
+    spec = bank.spec(1)
+    assert spec == BackendSpec(mode="lut", multiplier="mul8u_trunc4")
+    # exact lane really is the exact product table
+    i = MULTS.index("mul8u_exact")
+    a, b = np.meshgrid(np.arange(256), np.arange(256), indexing="ij")
+    np.testing.assert_array_equal(bank.luts[i], a * b)
+    with pytest.raises(ValueError, match="256"):
+        LutBank(names=("x",), luts=np.zeros((1, 16, 16), np.int32))
+    with pytest.raises(ValueError, match="name"):
+        LutBank(names=("x", "y"), luts=np.zeros((1, 256, 256), np.int32))
+
+
+def test_bank_eval_sharded(lib):
+    """bank_eval with an explicit bank sharding (single-device mesh
+    here) computes the same accuracies as the unsharded path."""
+    from repro.launch.mesh import bank_sharding, sweep_mesh
+
+    bank = bank_for(MULTS, lib)
+    x = jnp.asarray(np.linspace(-2, 2, 96).reshape(12, 8), jnp.float32)
+    w = jnp.asarray(np.ones((8, 4)), jnp.float32)
+
+    def fn(policy):
+        return jnp.mean(policy.matmul("a", x, w))
+
+    mesh = sweep_mesh()
+    sharding = bank_sharding(bank.n_mult, mesh)
+    got = np.asarray(bank_eval(fn, bank, sharding=sharding))
+    want = np.asarray(bank_eval(fn, bank))
+    np.testing.assert_array_equal(got, want)
