@@ -1,0 +1,251 @@
+"""Heterogeneous vs. uniform Pareto benchmark (DESIGN.md §2.5).
+
+The paper's Table II picks ONE multiplier for the whole network; the
+heterogeneous engine composes a different multiplier per conv layer
+(autoAx-style two-stage DSE: per-layer component models -> layer-wise
+Pareto pruning + beam composition -> exact batched verification through
+``policy_bank_eval``).  This benchmark runs both on the trained
+ResNet-8 / synthetic CIFAR-10 case study and writes
+``benchmarks/results/BENCH_heterogeneous.json`` recording:
+
+  * the uniform Table II front and the verified heterogeneous points,
+  * a heterogeneous point that **dominates** the best uniform
+    all-layers point under the same quality bound (strictly lower
+    power at >= accuracy) — the run FAILS if none exists,
+  * the equal-assignment consistency check: the heterogeneous engine
+    restricted to uniform rows must be bit-identical to sequential
+    ``ApproxPolicy(overrides=...)`` evaluations of the same policies
+    (the CI divergence gate), and
+  * the batched-vs-sequential verification wall-clock speedup
+    (one ``policy_bank_eval`` program vs. K sequential policy evals).
+
+``--quick`` (CI mode) skips training and shrinks the eval set; all
+checks are deterministic either way (seeded synthetic data).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.approx.dse import (DesignPoint, ExploreResult,
+                              explore_heterogeneous, select_multiplier,
+                              verify_assignments)
+from repro.approx.layers import ApproxPolicy, policy_bank_eval, policy_for_lane
+from repro.approx.resilience import all_layers_sweep
+from repro.approx.specs import BackendSpec, PolicyBank
+from repro.core.library import get_default_library
+from repro.models import resnet
+
+from .common import emit
+from .resilience_common import case_study_names, make_eval_fn, trained_resnet
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_heterogeneous.json")
+
+
+def _point_dict(p: DesignPoint) -> dict:
+    d = {"multiplier": p.multiplier,
+         "accuracy": round(p.accuracy, 6),
+         "network_rel_power": round(p.network_rel_power, 6)}
+    if p.assignment is not None:
+        d["assignment"] = dict(p.assignment)
+    return d
+
+
+def _downgrade_candidates(lib, names, counts, base_mult: str,
+                          cap: int = 14) -> list[dict]:
+    """Assignments that keep the uniform pick everywhere but downgrade
+    layers to strictly cheaper candidates — power strictly below the
+    uniform point by construction, so whichever downgrade the network
+    tolerates verifies at >= its accuracy.  Single-layer downgrades
+    cover every layer (largest counts first: biggest power win when the
+    layer turns out insensitive); pair downgrades cover the smallest
+    two layers (likeliest to verify)."""
+    base_power = lib.entries[base_mult].rel_power
+    cheaper = sorted(
+        (m for m in names if lib.entries[m].rel_power < base_power),
+        key=lambda m: lib.entries[m].rel_power)
+    if not cheaper:
+        return []
+    big_first = sorted(counts, key=counts.get, reverse=True)
+    small_first = big_first[::-1]
+    out = []
+    # thin but near-certain wins first: downgrade the smallest layer(s)
+    for m in cheaper[:3]:
+        for k in (1, 2):
+            a = {l: base_mult for l in counts}
+            for l in small_first[:k]:
+                a[l] = m
+            if a not in out:
+                out.append(a)
+    # big wins when tolerated: one large layer at a time
+    for l in big_first:
+        for m in cheaper[:3]:
+            a = {k: base_mult for k in counts}
+            a[l] = m
+            if a not in out:
+                out.append(a)
+    return out[:cap]
+
+
+def run(n_mult: int = 8, quick: bool = False, quality_bound: float = 0.02,
+        top_k: int = 8) -> dict:
+    lib = get_default_library()
+    # both modes use the TRAINED checkpoint (committed; restores in
+    # seconds) — heterogeneous composition needs a real per-layer
+    # sensitivity signal, which an untrained network cannot provide.
+    # --quick only shrinks the eval set.
+    cfg, params = trained_resnet(8)
+    if quick:
+        eval_fn = make_eval_fn(cfg, params, eval_n=64, batch=64)
+    else:
+        eval_fn = make_eval_fn(cfg, params)
+
+    names = case_study_names(lib, n_mult)
+    # aggressive truncations: uniformly fatal, but the cheap lanes the
+    # heterogeneous search mixes into insensitive layers
+    for extra in ("mul8u_trunc4", "mul8u_trunc3", "mul8u_trunc2"):
+        if extra in lib.entries and extra not in names:
+            names.append(extra)
+    counts = resnet.layer_mult_counts(cfg)
+    for n in names:                    # warm LUTs so no path pays packing
+        lib.lut(n)
+
+    # -- uniform axis (Table II, batched) ------------------------------
+    baseline = eval_fn(ApproxPolicy(default=BackendSpec.golden()))
+    rows_uniform = all_layers_sweep(eval_fn, counts, names, lib,
+                                    mode="lut", batch=True)
+    uniform_result = ExploreResult(
+        baseline_accuracy=baseline,
+        all_layers=[DesignPoint.from_row(r) for r in rows_uniform])
+    uniform_best = select_multiplier(uniform_result, quality_bound)
+
+    # -- heterogeneous axis (two-stage DSE) ----------------------------
+    extra = ([] if uniform_best is None else
+             _downgrade_candidates(lib, names, counts,
+                                   uniform_best.multiplier))
+    hetero_result = explore_heterogeneous(
+        eval_fn, counts, lib, multipliers=names,
+        quality_bound=quality_bound, top_k=top_k,
+        extra_assignments=extra, batch=True)
+    emit("heterogeneous/candidates", 0.0,
+         f"n={len(hetero_result.heterogeneous)}")
+
+    # -- equal-assignment consistency (CI divergence gate) -------------
+    layers = tuple(counts)
+    upb = PolicyBank.uniform(names, layers, lib)
+    accs_bank = np.asarray(policy_bank_eval(eval_fn.traceable, upb,
+                                            mode="lut"))
+    accs_seq = np.asarray([eval_fn(policy_for_lane(upb, p).materialize(lib))
+                           for p in range(upb.n_policies)],
+                          dtype=accs_bank.dtype)
+    equal_assignment_identical = bool((accs_bank == accs_seq).all())
+    emit("heterogeneous/equal_assignment", 0.0,
+         f"bit_identical={equal_assignment_identical}")
+
+    # -- batched vs sequential verification speedup --------------------
+    verify_assignments_list = [dict(p.assignment)
+                               for p in hetero_result.heterogeneous]
+    t0 = time.perf_counter()
+    pts_bat = verify_assignments(eval_fn, verify_assignments_list, counts,
+                                 lib, mode="lut", batch=True)
+    bat_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pts_seq = verify_assignments(eval_fn, verify_assignments_list, counts,
+                                 lib, mode="lut", batch=False)
+    seq_s = time.perf_counter() - t0
+    verify_identical = [p.accuracy for p in pts_bat] == \
+                       [p.accuracy for p in pts_seq]
+    speedup = seq_s / bat_s if bat_s > 0 else float("inf")
+    emit("heterogeneous/verify_batched", bat_s * 1e6,
+         f"k={len(pts_bat)};speedup={speedup:.2f};"
+         f"bit_identical={verify_identical}")
+
+    # -- dominance: hetero beats the best uniform point ----------------
+    dominating = None
+    if uniform_best is not None:
+        floor = baseline - quality_bound
+        for p in sorted(hetero_result.heterogeneous,
+                        key=lambda p: p.network_rel_power):
+            if (p.network_rel_power < uniform_best.network_rel_power
+                    and p.accuracy >= uniform_best.accuracy
+                    and p.accuracy >= floor):
+                dominating = p
+                break
+    if dominating is not None:
+        emit("heterogeneous/dominating_point", 0.0,
+             f"power={dominating.network_rel_power:.4f}"
+             f"<{uniform_best.network_rel_power:.4f};"
+             f"acc={dominating.accuracy:.4f}"
+             f">={uniform_best.accuracy:.4f}")
+
+    record = {
+        "benchmark": "heterogeneous_pareto",
+        "n_mult": len(names),
+        "multipliers": names,
+        "quick": quick,
+        "quality_bound": quality_bound,
+        "baseline_accuracy": round(baseline, 6),
+        "backend": jax.default_backend(),
+        "uniform": [_point_dict(p) for p in sorted(
+            uniform_result.all_layers,
+            key=lambda p: p.network_rel_power)],
+        "uniform_best": (_point_dict(uniform_best)
+                         if uniform_best else None),
+        "heterogeneous": [_point_dict(p) for p in sorted(
+            hetero_result.heterogeneous,
+            key=lambda p: p.network_rel_power)],
+        "selected": (_point_dict(hetero_result.selected)
+                     if hetero_result.selected else None),
+        "dominating": (_point_dict(dominating) if dominating else None),
+        "equal_assignment_bit_identical": equal_assignment_identical,
+        "verification": {
+            "k": len(pts_bat),
+            "sequential_s": round(seq_s, 4),
+            "batched_s": round(bat_s, 4),
+            "speedup": round(speedup, 2),
+            "bit_identical": verify_identical,
+        },
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("heterogeneous/bench_record", 0.0, BENCH_PATH)
+
+    # record is written first so CI failures still upload the artifact
+    if not equal_assignment_identical:
+        raise SystemExit(
+            "heterogeneous engine diverged from sequential evaluation "
+            "at equal (uniform) assignments — the bit-identical "
+            f"contract is broken (see {BENCH_PATH})")
+    if not verify_identical:
+        raise SystemExit(
+            "batched verification diverged from sequential policy "
+            f"evaluation (see {BENCH_PATH})")
+    if uniform_best is not None and dominating is None:
+        raise SystemExit(
+            "no heterogeneous point dominates the best uniform point "
+            f"under quality bound {quality_bound} (see {BENCH_PATH})")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-mult", type=int, default=None,
+                    help="candidate count (default: 8, or 12 with "
+                         "--quick where the sweep is cheap)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small eval set (CI); both modes restore the "
+                         "committed trained checkpoint")
+    ap.add_argument("--quality-bound", type=float, default=0.02)
+    ap.add_argument("--top-k", type=int, default=8)
+    args = ap.parse_args()
+    n_mult = (args.n_mult if args.n_mult is not None
+              else (12 if args.quick else 8))
+    run(n_mult=n_mult, quick=args.quick,
+        quality_bound=args.quality_bound, top_k=args.top_k)

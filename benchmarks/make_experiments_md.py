@@ -1,6 +1,6 @@
-"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
-the dry-run result JSONs (idempotent; §Perf and prose are maintained by
-hand between the markers)."""
+"""Regenerate the §Dry-run, §Roofline and §Heterogeneous tables of
+EXPERIMENTS.md from the result JSONs (idempotent; §Perf and prose are
+maintained by hand between the markers)."""
 from __future__ import annotations
 
 import glob
@@ -112,6 +112,54 @@ def perf_table() -> str:
     return "\n\n".join(out) if out else "(hillclimb results pending)"
 
 
+HETERO_PATH = os.path.join(os.path.dirname(__file__), "results",
+                           "BENCH_heterogeneous.json")
+
+
+def hetero_table() -> str:
+    """Uniform-vs-heterogeneous front from BENCH_heterogeneous.json
+    (written by `python -m benchmarks.heterogeneous_pareto`)."""
+    if not os.path.exists(HETERO_PATH):
+        return "(run `python -m benchmarks.heterogeneous_pareto` first)"
+    with open(HETERO_PATH) as f:
+        r = json.load(f)
+    rows = [f"Baseline (golden int8) accuracy "
+            f"{100 * r['baseline_accuracy']:.2f}%, quality bound "
+            f"{100 * r['quality_bound']:.1f} points, "
+            f"{r['n_mult']} candidate multipliers"
+            f"{' (quick)' if r.get('quick') else ''}.", "",
+            "| axis | point | power% | acc% |",
+            "|---|---|---|---|"]
+    if r.get("uniform_best"):
+        u = r["uniform_best"]
+        rows.append(f"| uniform best | {u['multiplier']} "
+                    f"| {100 * u['network_rel_power']:.1f} "
+                    f"| {100 * u['accuracy']:.2f} |")
+    floor = r["baseline_accuracy"] - r["quality_bound"]
+    hetero = r.get("heterogeneous", [])
+    survivors = [h for h in hetero if h["accuracy"] >= floor]
+    for h in survivors[:8]:
+        rows.append(f"| heterogeneous | {h['multiplier']} "
+                    f"| {100 * h['network_rel_power']:.1f} "
+                    f"| {100 * h['accuracy']:.2f} |")
+    rows += ["", f"{len(hetero)} candidates verified, {len(survivors)} "
+             "within the bound (prediction proposes, exact batched "
+             "verification disposes)."]
+    if r.get("dominating"):
+        d = r["dominating"]
+        rows += ["", f"Dominating point: {d['multiplier']} at "
+                 f"{100 * d['network_rel_power']:.1f}% power / "
+                 f"{100 * d['accuracy']:.2f}% accuracy — strictly below "
+                 f"the best uniform point at ≥ its accuracy."]
+    v = r.get("verification")
+    if v:
+        rows += ["", f"Exact verification of {v['k']} candidates: "
+                 f"{v['sequential_s']}s sequential vs {v['batched_s']}s "
+                 f"batched ({v['speedup']}x, bit_identical="
+                 f"{v['bit_identical']})."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -129,6 +177,7 @@ def main() -> None:
     text = replace_section(text, "DRYRUN", dryrun_table(results))
     text = replace_section(text, "ROOFLINE", roofline_table(results))
     text = replace_section(text, "PERF", perf_table())
+    text = replace_section(text, "HETERO", hetero_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

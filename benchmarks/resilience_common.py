@@ -26,6 +26,17 @@ CKPT_DIR = os.path.join(os.path.dirname(__file__), "results",
 TRAIN_STEPS = 320
 
 
+def case_study_names(lib, n_mult: int) -> list[str]:
+    """The paper's candidate set: Pareto selection capped at ``n_mult``,
+    plus the truncation/BAM baselines Table II always reports."""
+    sel = lib.case_study_selection(per_metric=10)
+    names = [e.name for e in sel][:n_mult]
+    for extra in ("mul8u_trunc7", "mul8u_trunc6", "mul8u_bam_h0_v4"):
+        if extra in lib.entries and extra not in names:
+            names.append(extra)
+    return names
+
+
 def trained_resnet(depth: int = 8):
     cfg = resnet.resnet_config(depth)
     params = resnet.init_params(jax.random.PRNGKey(0), cfg)

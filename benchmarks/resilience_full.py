@@ -33,20 +33,10 @@ from repro.core.library import get_default_library
 from repro.models import resnet
 
 from .common import emit
-from .resilience_common import make_eval_fn, trained_resnet
+from .resilience_common import case_study_names, make_eval_fn, trained_resnet
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
                           "BENCH_resilience.json")
-
-
-def _case_study_names(lib, n_mult: int) -> list[str]:
-    sel = lib.case_study_selection(per_metric=10)
-    names = [e.name for e in sel][:n_mult]
-    # always include the paper's baselines
-    for extra in ("mul8u_trunc7", "mul8u_trunc6", "mul8u_bam_h0_v4"):
-        if extra in lib.entries and extra not in names:
-            names.append(extra)
-    return names
 
 
 def run(n_mult: int = 8, quick: bool = False) -> dict:
@@ -64,7 +54,7 @@ def run(n_mult: int = 8, quick: bool = False) -> dict:
     us = (time.time() - t0) * 1e6
     emit("table_II/float", us, f"acc={acc_f32:.4f};power=1.0")
 
-    names = _case_study_names(lib, n_mult)
+    names = case_study_names(lib, n_mult)
     counts = resnet.layer_mult_counts(cfg)
     for n in names:                     # warm LUTs so neither path pays
         lib.lut(n)

@@ -1,6 +1,8 @@
 """End-to-end driver (paper Sec. IV case study): train ResNet on
 synthetic CIFAR-10, then run the resilience analysis with library
-multipliers — per-layer (Fig. 4) and all-layers (Table II).
+multipliers — per-layer (Fig. 4), all-layers (Table II), and the
+beyond-paper heterogeneous composition (a different multiplier per
+layer, selected by the two-stage DSE and fine-tuned under STE).
 
     PYTHONPATH=src python examples/train_resnet_approx.py \
         [--depth 8] [--steps 300] [--n-mult 6] [--full]
@@ -12,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.dse import explore, select_multiplier
+from repro.approx.dse import explore, explore_heterogeneous, select_multiplier
+from repro.approx.resilience import BankableEval
 from repro.approx.specs import BackendSpec
 from repro.core.library import get_default_library
 from repro.data.synthetic import CifarBatches
@@ -65,13 +68,19 @@ def main() -> None:
 
     # --- float / int8 reference accuracies (paper: 83.42% -> 82.85%) ---
     eval_batches = list(eval_data.eval_batches())
+    eval_images = jnp.asarray(np.stack([b["images"] for b in eval_batches]))
+    eval_labels = jnp.asarray(np.stack([b["labels"] for b in eval_batches]))
 
-    def eval_fn(policy):
-        fwd = jax.jit(lambda p, im: resnet.forward(p, im, cfg, policy))
-        accs = [np.mean(np.argmax(np.asarray(
-            fwd(params, jnp.asarray(b["images"]))), -1) == b["labels"])
-            for b in eval_batches]
-        return float(np.mean(accs))
+    def traceable(policy):
+        accs = [jnp.mean((jnp.argmax(
+            resnet.forward(params, eval_images[i], cfg, policy), -1)
+            == eval_labels[i]).astype(jnp.float32))
+            for i in range(eval_images.shape[0])]
+        return jnp.mean(jnp.stack(accs))
+
+    eval_fn = BankableEval(
+        fn=lambda policy: float(jax.jit(lambda: traceable(policy))()),
+        traceable=traceable)
 
     from repro.approx.layers import ApproxPolicy
     acc_f32 = eval_fn(ApproxPolicy(default=BackendSpec.exact("f32")))
@@ -85,9 +94,10 @@ def main() -> None:
         mults = mults[:: max(1, len(mults) // args.n_mult)][:args.n_mult]
     counts = resnet.layer_mult_counts(cfg)
 
+    cache: dict = {}
     print(f"\n[Table II-style] all conv layers, {len(mults)} multipliers:")
     result = explore(eval_fn, counts, lib, multipliers=mults, mode="lut",
-                     per_layer=False)
+                     per_layer=False, batch=True, cache=cache)
     acc_int8 = result.baseline_accuracy
     print(f"[resnet] 8-bit exact (golden) accuracy: {100 * acc_int8:.2f}%")
     print(f"{'multiplier':<20}{'power%':>8}{'MAE':>10}{'acc%':>8}")
@@ -111,13 +121,74 @@ def main() -> None:
     worst = min(rows, key=lambda r: r.accuracy)
     layer_result = explore(eval_fn, counts, lib,
                            multipliers=[worst.multiplier], mode="lut",
-                           all_layers=False)
+                           all_layers=False, batch=True, cache=cache)
     print(f"{'layer':<18}{'mult share%':>12}{'acc%':>8}")
     for r in sorted(layer_result.per_layer, key=lambda r: -r.mult_share):
         print(f"{r.layer:<18}{100 * r.mult_share:>12.1f}"
               f"{100 * r.accuracy:>8.2f}")
     print("\n[resnet] claim check: the layer with the largest multiplier "
           "share should cause the largest accuracy drop when approximated")
+
+    # --- heterogeneous composition + approximate-aware fine-tune -------
+    print(f"\n[heterogeneous DSE] composing a different multiplier per "
+          f"layer (quality bound 1 point):")
+    hetero = explore_heterogeneous(eval_fn, counts, lib,
+                                   multipliers=mults, mode="lut",
+                                   quality_bound=0.01, batch=True,
+                                   cache=cache)
+    for p in sorted(hetero.heterogeneous,
+                    key=lambda p: p.network_rel_power):
+        print(f"  {p.multiplier:<14}{100 * p.network_rel_power:>8.1f}%"
+              f"{100 * p.accuracy:>8.2f}%")
+    pick_h = hetero.selected
+    if pick_h is None:
+        print("  no heterogeneous point within the bound; "
+              "skipping fine-tune")
+        return
+    print(f"[heterogeneous DSE] selected "
+          f"(power {100 * pick_h.network_rel_power:.1f}%, "
+          f"acc {100 * pick_h.accuracy:.2f}%):")
+    for layer, m in pick_h.assignment:
+        print(f"    {layer:<18}{m}")
+    hetero_policy = pick_h.policy().materialize(lib)
+    print(f"  policy JSON: {pick_h.policy().to_json()}")
+
+    # fine-tune WITH the heterogeneous datapath in the loss (STE
+    # gradients): the network adapts to the approximation it will run
+    # on, recovering part of the drop — beyond-paper, the paper itself
+    # performs no retraining.
+    ft_steps = max(20, args.steps // 10)
+    trainer_ft = Trainer(
+        lambda p, batch: resnet.loss_fn(p, batch, cfg, hetero_policy),
+        params,
+        OptimizerConfig(lr=3e-4, warmup_steps=5, total_steps=ft_steps,
+                        weight_decay=1e-4),
+        TrainLoopConfig(total_steps=ft_steps, ckpt_every=10 ** 9,
+                        ckpt_dir=args.ckpt_dir + "_hetero",
+                        log_every=10 ** 9))
+    t0 = time.time()
+    trainer_ft.run(batches())
+    params_ft = trainer_ft.params
+
+    def acc_under(p, policy):
+        fwd = jax.jit(lambda pp, im: resnet.forward(pp, im, cfg, policy))
+        accs = [np.mean(np.argmax(np.asarray(
+            fwd(p, jnp.asarray(b["images"]))), -1) == b["labels"])
+            for b in eval_batches]
+        return float(np.mean(accs))
+
+    acc_post = acc_under(params_ft, hetero_policy)
+    print(f"[heterogeneous fine-tune] {ft_steps} steps in "
+          f"{time.time() - t0:.0f}s: accuracy under the heterogeneous "
+          f"datapath {100 * pick_h.accuracy:.2f}% -> {100 * acc_post:.2f}%")
+
+    # ship weights + the per-layer accelerator configuration together:
+    # the policy rides in the checkpoint manifest metadata
+    from repro.train.checkpoint import CheckpointManager
+    mgr = CheckpointManager(args.ckpt_dir + "_hetero", keep=1)
+    mgr.save(ft_steps, params_ft, policy=pick_h.policy())
+    print(f"[heterogeneous fine-tune] checkpoint + policy saved to "
+          f"{args.ckpt_dir}_hetero")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 from .quant import QuantParams, quantize, dequantize, calibrate
 from .registry import (Datapath, available_datapaths, get_datapath,
                        register_datapath)
-from .specs import (BackendSpec, LutBank, MaterializedBackend, bank_for,
-                    canonicalize, materialize, materialize_cache_stats,
-                    clear_materialize_cache)
+from .specs import (BackendSpec, LutBank, MaterializedBackend, PolicyBank,
+                    bank_for, canonicalize, materialize,
+                    materialize_cache_stats, clear_materialize_cache)
 from .backend import MatmulBackend, as_backend, backend_matmul
-from .layers import ApproxPolicy, bank_eval, spec_of
-from .resilience import BankableEval, can_bank
-from .dse import (DesignPoint, ExploreResult, explore, pareto_points,
-                  select_multiplier)
+from .layers import (ApproxPolicy, bank_eval, policy_bank_eval,
+                     policy_for_lane, spec_of)
+from .resilience import BankableEval, LayerComponents, can_bank
+from .dse import (DesignPoint, ExploreResult, compose_assignments,
+                  explore, explore_heterogeneous, pareto_points,
+                  select_multiplier, select_point, verify_assignments)

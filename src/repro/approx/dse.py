@@ -1,4 +1,4 @@
-"""autoAx-style design-space exploration facade (DESIGN.md §2.3).
+"""autoAx-style design-space exploration facade (DESIGN.md §2.3, §2.5).
 
 The paper's workflow — library → Pareto selection → per-layer resilience
 sweep → pick the multiplier for the application — as one call, in the
@@ -15,29 +15,49 @@ sweeps on top of ``repro.approx.resilience`` with a policy-keyed eval
 cache, so repeated explorations (and the shared exact baseline) never
 re-evaluate the same configuration; backend materialization is cached
 per (library, spec) so sweeps share jit traces.
+
+``explore_heterogeneous`` goes beyond the paper's single-multiplier
+endpoint: a two-stage autoAx-style search that composes a DIFFERENT
+multiplier per layer (prediction from per-layer component models +
+layer-wise Pareto pruning + beam composition, then exact batched
+verification of the shortlist through ``policy_bank_eval``), growing
+``ExploreResult`` with a ``heterogeneous`` axis whose points carry full
+per-layer assignments (DESIGN.md §2.5).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Mapping, Optional
 
-from .layers import ApproxPolicy
-from .resilience import (ResilienceRow, all_layers_sweep, can_bank,
-                         per_layer_sweep)
-from .specs import BackendSpec
+import numpy as np
+
+from .layers import ApproxPolicy, policy_bank_eval, policy_for_lane
+from .power import network_power_for_assignment
+from .resilience import (LayerComponents, ResilienceRow, all_layers_sweep,
+                         can_bank, per_layer_sweep)
+from .specs import BackendSpec, PolicyBank
 
 
 @dataclass(frozen=True)
 class DesignPoint:
-    """One evaluated configuration of the design space."""
+    """One evaluated configuration of the design space.
+
+    Uniform points set ``layer`` to a layer name or "all";
+    heterogeneous points set ``layer="hetero"`` and carry the full
+    per-layer composition in ``assignment`` (layer name -> multiplier
+    name, ordered)."""
     multiplier: str
-    layer: str                  # layer name, or "all"
+    layer: str                  # layer name, "all", or "hetero"
     accuracy: float
     network_rel_power: float
     multiplier_rel_power: float
     mult_share: float
     spec: Optional[BackendSpec] = None
     errors: dict = field(default_factory=dict)
+    assignment: Optional[tuple[tuple[str, str], ...]] = None
+    # datapath the assignment was VERIFIED under; policy() reproduces it
+    mode: str = "lut"
+    variant: str = "ref"
 
     @staticmethod
     def from_row(r: ResilienceRow) -> "DesignPoint":
@@ -47,9 +67,37 @@ class DesignPoint:
             multiplier_rel_power=r.multiplier_rel_power,
             mult_share=r.mult_share, spec=r.spec, errors=dict(r.errors))
 
+    @staticmethod
+    def from_assignment(assignment: Mapping[str, str], accuracy: float,
+                        network_rel_power: float,
+                        mode: str = "lut",
+                        variant: str = "ref") -> "DesignPoint":
+        """A verified heterogeneous composition as a design point; the
+        distinct multipliers are summarized in ``multiplier``, the
+        exact per-layer mapping preserved in ``assignment``, and the
+        datapath it was measured under in ``mode``/``variant``."""
+        distinct = tuple(dict.fromkeys(assignment.values()))
+        label = (distinct[0] if len(distinct) == 1
+                 else f"hetero[{len(distinct)}]")
+        return DesignPoint(
+            multiplier=label, layer="hetero", accuracy=accuracy,
+            network_rel_power=network_rel_power,
+            multiplier_rel_power=network_rel_power, mult_share=1.0,
+            spec=None, assignment=tuple(assignment.items()),
+            mode=mode, variant=variant)
+
     def policy(self, base: Optional[BackendSpec] = None) -> ApproxPolicy:
         """Deployable policy for this point: the multiplier everywhere
-        ("all"), or only in the swept layer over an exact base."""
+        ("all"), one override per assigned layer ("hetero", on the
+        ``mode``/``variant`` datapath the point was verified under), or
+        only the swept layer over an exact base."""
+        if self.assignment is not None:
+            return ApproxPolicy(
+                default=base or BackendSpec.golden(),
+                overrides=[(layer, BackendSpec(mode=self.mode,
+                                               multiplier=m,
+                                               variant=self.variant))
+                           for layer, m in self.assignment])
         spec = self.spec or BackendSpec(mode="lut",
                                         multiplier=self.multiplier)
         if self.layer == "all":
@@ -66,6 +114,9 @@ class DesignPoint:
             "mult_share": self.mult_share,
             "spec": self.spec.to_dict() if self.spec else None,
             "errors": dict(self.errors),
+            "assignment": (dict(self.assignment)
+                           if self.assignment is not None else None),
+            "mode": self.mode, "variant": self.variant,
         }
 
 
@@ -95,20 +146,29 @@ class ExploreResult:
     baseline_accuracy: float            # exact int8 golden datapath
     all_layers: list[DesignPoint] = field(default_factory=list)
     per_layer: list[DesignPoint] = field(default_factory=list)
+    heterogeneous: list[DesignPoint] = field(default_factory=list)
     selected: Optional[DesignPoint] = None
 
-    def pareto(self) -> list[DesignPoint]:
-        return pareto_points(self.all_layers)
+    def pareto(self, axis: str = "all_layers") -> list[DesignPoint]:
+        """Non-dominated front of one axis ("all_layers",
+        "heterogeneous") or of their union ("combined")."""
+        if axis == "combined":
+            return pareto_points(self.all_layers + self.heterogeneous)
+        return pareto_points(getattr(self, axis))
 
-    def within(self, max_accuracy_drop: float) -> list[DesignPoint]:
+    def within(self, max_accuracy_drop: float,
+               axis: str = "all_layers") -> list[DesignPoint]:
         floor = self.baseline_accuracy - max_accuracy_drop
-        return [p for p in self.all_layers if p.accuracy >= floor]
+        pts = (self.all_layers + self.heterogeneous
+               if axis == "combined" else getattr(self, axis))
+        return [p for p in pts if p.accuracy >= floor]
 
     def to_json_dict(self) -> dict:
         return {
             "baseline_accuracy": self.baseline_accuracy,
             "all_layers": [p.to_dict() for p in self.all_layers],
             "per_layer": [p.to_dict() for p in self.per_layer],
+            "heterogeneous": [p.to_dict() for p in self.heterogeneous],
             "selected": self.selected.to_dict() if self.selected else None,
         }
 
@@ -226,3 +286,254 @@ def select_multiplier(result: ExploreResult,
     if not ok:
         return None
     return min(ok, key=lambda p: (p.network_rel_power, -p.accuracy))
+
+
+def select_point(result: ExploreResult, max_accuracy_drop: float,
+                 axis: str = "combined") -> Optional[DesignPoint]:
+    """Generalized endpoint over any result axis (default: uniform ∪
+    heterogeneous): the lowest-power verified point within the
+    accuracy budget."""
+    ok = result.within(max_accuracy_drop, axis=axis)
+    if not ok:
+        return None
+    return min(ok, key=lambda p: (p.network_rel_power, -p.accuracy))
+
+
+# ----------------------------------------------------------------------
+# Heterogeneous two-stage DSE (DESIGN.md §2.5)
+# ----------------------------------------------------------------------
+def compose_assignments(components: LayerComponents,
+                        quality_bound: Optional[float] = None,
+                        power_budget: Optional[float] = None,
+                        beam_width: int = 8,
+                        top_k: int = 8) -> list[np.ndarray]:
+    """Prediction-stage composition: layer-wise Pareto pruning followed
+    by a beam search over layers (largest multiplication counts first).
+
+    Beam states accumulate predicted accuracy drop (additive model) and
+    assigned power; states exceeding the drop threshold are cut, and
+    the beam keeps both the lowest-power and the lowest-drop frontiers
+    so a cheap-but-damaged prefix cannot starve the search.  The beam
+    runs at a LADDER of thresholds around ``quality_bound`` (0.5×, 1×,
+    2×) and unions the results: the additive model is deliberately
+    pessimistic (per-layer drops rarely compound fully), so verifying a
+    band around the predicted bound is how the exact stage recovers
+    compositions the prediction would wrongly cut — the autoAx
+    predict-then-verify discipline.  Returns up to ``top_k`` distinct
+    assignment rows (indices into ``components.multipliers``) ordered
+    by predicted power — the shortlist the verification stage measures.
+    """
+    thresholds = ([quality_bound * 0.5, quality_bound, quality_bound * 2]
+                  if quality_bound is not None else [None])
+    out, seen = [], set()
+    for threshold in thresholds:
+        for row in _beam_once(components, threshold, beam_width, top_k):
+            if power_budget is not None and \
+                    components.predict_power(row) > power_budget:
+                continue
+            key = tuple(row.tolist())
+            if key not in seen:
+                seen.add(key)
+                out.append(row)
+    out.sort(key=lambda r: (components.predict_power(r),
+                            -components.predict_accuracy(r)))
+    return out[:top_k]
+
+
+def _beam_once(components: LayerComponents, threshold: Optional[float],
+               beam_width: int, top_k: int) -> list[np.ndarray]:
+    fronts = components.layer_pareto()
+    d = components.drop()
+    order = sorted(range(len(components.layers)),
+                   key=lambda j: -components.counts[j])
+    # state: (assigned_power_sum, drop_sum, {layer_idx: mult_idx})
+    states: list[tuple[float, float, dict]] = [(0.0, 0.0, {})]
+    for j in order:
+        nxt = []
+        for pw, dr, part in states:
+            for i in fronts[j]:
+                dr2 = dr + float(d[j, i])
+                if threshold is not None and dr2 > threshold:
+                    continue
+                nxt.append((pw + components.counts[j]
+                            * float(components.rel_power[i]), dr2,
+                            {**part, j: i}))
+        if not nxt:
+            # bound infeasible at this layer: keep the least-damaging
+            # candidate so the search always returns something
+            for pw, dr, part in states:
+                i = min(fronts[j],
+                        key=lambda i: (float(d[j, i]),
+                                       float(components.rel_power[i])))
+                nxt.append((pw + components.counts[j]
+                            * float(components.rel_power[i]),
+                            dr + float(d[j, i]), {**part, j: i}))
+        by_power = sorted(nxt, key=lambda s: (s[0], s[1]))[:beam_width]
+        by_drop = sorted(nxt, key=lambda s: (s[1], s[0]))[:beam_width]
+        seen_ids = set()
+        states = []
+        for s in by_power + by_drop:
+            key = tuple(sorted(s[2].items()))
+            if key not in seen_ids:
+                seen_ids.add(key)
+                states.append(s)
+    states.sort(key=lambda s: (s[0], s[1]))
+    out, seen = [], set()
+    for pw, dr, part in states:
+        row = np.asarray([part[j] for j in range(len(components.layers))],
+                         dtype=np.int32)
+        key = tuple(row.tolist())
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(row)
+        if len(out) >= top_k:
+            break
+    return out
+
+
+def verify_assignments(
+    eval_fn: Callable[[ApproxPolicy], float],
+    assignments: list[Mapping[str, str]],
+    layer_counts: dict[str, int],
+    library,
+    mode: str = "lut",
+    variant: str = "ref",
+    batch: bool = True,
+    sharding=None,
+    assign_sharding=None,
+    cache: Optional[dict] = None,
+) -> list[DesignPoint]:
+    """Verification stage: measure every candidate assignment EXACTLY.
+
+    Batched (default, when the eval and datapath support it): the
+    assignments pack into a ``PolicyBank`` and evaluate through
+    ``policy_bank_eval`` in one compiled program.  Sequential fallback
+    evaluates ``policy_for_lane`` per candidate through the policy
+    cache.  Either way results land in ``cache`` under
+    sequential-compatible policy keys, and power is the exact
+    count-weighted ``network_power_for_assignment``.
+    """
+    if not assignments:
+        return []
+    layers = tuple(dict.fromkeys(
+        l for a in assignments for l in a))
+    pbank = PolicyBank.from_assignments(assignments, library,
+                                        layers=layers)
+    batch = batch and can_bank(eval_fn, mode, variant)
+    if batch:
+        accs = np.asarray(policy_bank_eval(
+            eval_fn.traceable, pbank, mode=mode, variant=variant,
+            sharding=sharding, assign_sharding=assign_sharding))
+        accs = [float(a) for a in accs]
+    else:
+        run = _cached_eval(eval_fn, cache) if cache is not None else eval_fn
+        accs = [float(run(policy_for_lane(pbank, p, mode=mode,
+                                          variant=variant)))
+                for p in range(pbank.n_policies)]
+    if cache is not None:
+        for p, acc in enumerate(accs):
+            cache.setdefault(
+                policy_for_lane(pbank, p, mode=mode,
+                                variant=variant).cache_key(), acc)
+    rel_power = {name: library.entries[name].rel_power
+                 for name in pbank.bank.names}
+    points = []
+    for p, acc in enumerate(accs):
+        a = pbank.assignment(p)
+        points.append(DesignPoint.from_assignment(
+            a, acc,
+            network_power_for_assignment(layer_counts, a, rel_power),
+            mode=mode, variant=variant))
+    return points
+
+
+def explore_heterogeneous(
+    eval_fn: Callable[[ApproxPolicy], float],
+    layer_counts: dict[str, int],
+    library=None,
+    multipliers: Optional[list[str]] = None,
+    mode: str = "lut",
+    variant: str = "ref",
+    quality_bound: float = 0.01,
+    power_budget: Optional[float] = None,
+    beam_width: int = 8,
+    top_k: int = 8,
+    components: Optional[LayerComponents] = None,
+    extra_assignments: Optional[list[Mapping[str, str]]] = None,
+    cache: Optional[dict] = None,
+    batch: bool = True,
+    sharding=None,
+    assign_sharding=None,
+) -> ExploreResult:
+    """Two-stage heterogeneous DSE (autoAx-style, DESIGN.md §2.5).
+
+    Stage 1 (predict): run the per-layer sweep (batched when the eval
+    supports it) and distill it into ``LayerComponents`` — or reuse
+    ``components`` from a previous exploration.  Layer-wise Pareto
+    pruning keeps only per-layer non-dominated multipliers, and a beam
+    search composes up to ``top_k`` full assignments whose *predicted*
+    (additive-drop) accuracy stays within ``quality_bound`` of the
+    golden baseline, optionally under a ``power_budget`` ceiling.
+
+    Stage 2 (verify): the shortlist — plus any ``extra_assignments`` —
+    is measured EXACTLY in one ``policy_bank_eval`` program (sequential
+    fallback mirrors ``explore(batch=...)`` semantics).  Verified
+    points land on ``result.heterogeneous`` with exact count-weighted
+    power, and ``result.selected`` is the lowest-power verified point
+    within ``quality_bound`` (and ``power_budget`` when given).
+
+    Returns an ``ExploreResult`` whose ``per_layer`` axis holds the
+    stage-1 sweep (empty when ``components`` was supplied).
+    """
+    if library is None:
+        from repro.core.library import get_default_library
+        library = get_default_library()
+    if multipliers is None:
+        multipliers = [e.name for e in library.case_study_selection()]
+    cache = cache if cache is not None else {}
+    run = _cached_eval(eval_fn, cache)
+
+    golden = BackendSpec.golden().materialize()
+    per_layer_points: list[DesignPoint] = []
+    if components is None:
+        baseline = run(ApproxPolicy(default=golden))
+        do_batch = batch and can_bank(eval_fn, mode, variant)
+        rows = per_layer_sweep(eval_fn if do_batch else run, layer_counts,
+                               multipliers, library, mode=mode,
+                               base=golden, variant=variant,
+                               batch=do_batch, sharding=sharding)
+        if do_batch:
+            _seed_cache(cache, rows, golden)
+        components = LayerComponents.from_rows(rows, layer_counts,
+                                               baseline)
+        per_layer_points = [DesignPoint.from_row(r) for r in rows]
+    baseline = components.baseline
+
+    candidates = compose_assignments(components,
+                                     quality_bound=quality_bound,
+                                     power_budget=power_budget,
+                                     beam_width=beam_width, top_k=top_k)
+    assignments = [
+        {l: components.multipliers[i]
+         for l, i in zip(components.layers, row)}
+        for row in candidates]
+    for extra in (extra_assignments or []):
+        a = dict(extra)
+        if a not in assignments:
+            assignments.append(a)
+
+    hetero = verify_assignments(
+        eval_fn, assignments, layer_counts, library, mode=mode,
+        variant=variant, batch=batch, sharding=sharding,
+        assign_sharding=assign_sharding, cache=cache)
+
+    result = ExploreResult(baseline_accuracy=baseline,
+                           per_layer=per_layer_points,
+                           heterogeneous=hetero)
+    ok = [p for p in result.within(quality_bound, axis="heterogeneous")
+          if power_budget is None or p.network_rel_power <= power_budget]
+    if ok:
+        result.selected = min(ok, key=lambda p: (p.network_rel_power,
+                                                 -p.accuracy))
+    return result

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from .backend import BackendLike, MatmulBackend, as_backend, backend_matmul
 from .registry import get_datapath
-from .specs import BackendSpec, LutBank, MaterializedBackend, canonicalize
+from .specs import (BackendSpec, LutBank, MaterializedBackend, PolicyBank,
+                    canonicalize)
 
 
 def spec_of(backend: BackendLike) -> BackendSpec:
@@ -206,6 +207,73 @@ def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
         return fn(policy)
 
     return jax.jit(jax.vmap(lane))(luts)
+
+
+def policy_for_lane(pbank: PolicyBank, p: int, *, mode: str = "lut",
+                    variant: str = "ref",
+                    base: Optional[BackendLike] = None) -> ApproxPolicy:
+    """The sequential (serializable) policy lane ``p`` of a
+    ``policy_bank_eval`` stands for: ``base`` (golden int8 by default)
+    everywhere, with layer ``j`` overridden to multiplier
+    ``pbank.bank.names[pbank.assign[p, j]]``.  Evaluating this policy
+    sequentially is bit-identical to lane ``p`` of the banked program —
+    the contract tests and benchmarks assert."""
+    base = base if base is not None else BackendSpec.golden().materialize()
+    return ApproxPolicy(default=base,
+                        overrides=pbank.spec_overrides(p, mode=mode,
+                                                       variant=variant))
+
+
+def policy_bank_eval(fn, pbank: PolicyBank, *, mode: str = "lut",
+                     variant: str = "ref",
+                     base: Optional[BackendLike] = None,
+                     sharding=None, assign_sharding=None):
+    """Evaluate ``fn(policy)`` for every *heterogeneous* assignment row
+    of ``pbank`` in ONE compiled program (``jit(vmap(...))`` over the
+    policy axis) — the per-layer generalization of ``bank_eval``.
+
+    Where ``bank_eval`` lane ``i`` runs ONE multiplier in the swept
+    entry, ``policy_bank_eval`` lane ``p`` composes a different
+    multiplier per named layer: layer ``j`` gathers its own LUT lane
+    ``luts[assign[p, j]]`` from the shared bank, so K heterogeneous
+    policies over D distinct multipliers cost one program and D LUTs of
+    device memory regardless of K.  Layers not named in ``pbank.layers``
+    run ``base`` (default golden int8) unbatched.
+
+    ``fn`` must be traceable (see ``bank_eval``); ``mode``/``variant``
+    select the registered datapath, which must declare ``bankable``
+    (under the ``pallas`` variant the custom batching rule of
+    ``repro.kernels.ops.approx_matmul_lut`` collapses each layer's
+    gathered LUT lanes into the banked kernel).  ``sharding``
+    optionally places the ``(n_mult, 256, 256)`` bank, and
+    ``assign_sharding`` the ``(n_policies, n_layers)`` assignment
+    matrix (``repro.launch.mesh.policy_sharding``) — sharding the
+    assignment's leading axis makes XLA partition the whole vmapped
+    program per policy lane.
+
+    Returns ``fn``'s output stacked along a new leading ``n_policies``
+    axis, bit-identical per lane to the sequential evaluation of
+    ``policy_for_lane(pbank, p)``.
+    """
+    luts = jnp.asarray(pbank.bank.luts)
+    if sharding is not None:
+        luts = jax.device_put(luts, sharding)
+    assign = jnp.asarray(pbank.assign, dtype=jnp.int32)
+    if assign_sharding is not None:
+        assign = jax.device_put(assign, assign_sharding)
+    if base is None:
+        base = BackendSpec.golden().materialize()
+
+    def lane(assign_row):
+        overrides = []
+        for j, layer in enumerate(pbank.layers):
+            lut = jnp.take(luts, assign_row[j], axis=0)   # (256,256)
+            mb = _bank_lane_backend(lut, pbank.bank, mode, variant)
+            overrides.append((layer, mb))
+        policy = ApproxPolicy(default=base, overrides=overrides)
+        return fn(policy)
+
+    return jax.jit(jax.vmap(lane))(assign)
 
 
 def dense(policy: ApproxPolicy, name: str, x: jax.Array, w: jax.Array,

@@ -5,10 +5,17 @@ layers" relative to the exact 8-bit datapath (Table II / Fig. 4).  Given
 per-layer multiplication counts and the per-layer multiplier assignment,
 the relative power is the count-weighted mean of the multipliers'
 relative powers.
+
+``network_power_for_assignment`` is the heterogeneous-composition entry
+point (DESIGN.md §2.5): it scores an arbitrary layer-name -> multiplier
+mapping, which is how both the per-layer resilience rows (a one-layer
+assignment) and the heterogeneous DSE (a full assignment) account power
+through ONE code path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Mapping
 
 
 @dataclass(frozen=True)
@@ -28,4 +35,34 @@ def network_relative_power(layers: list[LayerPower]) -> float:
 
 def per_layer_share(layers: list[LayerPower]) -> dict[str, float]:
     total = sum(l.mult_count for l in layers)
+    if total == 0:
+        # mirror network_relative_power's zero-mult guard: no
+        # multiplications means no layer owns a share of them
+        return {l.name: 0.0 for l in layers}
     return {l.name: l.mult_count / total for l in layers}
+
+
+def network_power_for_assignment(
+    layer_counts: Mapping[str, int],
+    assignment: Mapping[str, str],
+    rel_power: Mapping[str, float],
+    base_multiplier: str = "exact",
+    base_rel_power: float = 1.0,
+) -> float:
+    """Count-weighted network power of a heterogeneous assignment.
+
+    ``assignment`` maps layer names to multiplier names and may cover
+    any subset of ``layer_counts``; unassigned layers run the base
+    (exact) datapath at ``base_rel_power``.  ``rel_power`` maps each
+    assigned multiplier name to its relative power (e.g.
+    ``{e.name: e.rel_power for e in library.entries.values()}``).
+    """
+    layers = []
+    for name, count in layer_counts.items():
+        if name in assignment:
+            mult = assignment[name]
+            layers.append(LayerPower(name, count, mult, rel_power[mult]))
+        else:
+            layers.append(LayerPower(name, count, base_multiplier,
+                                     base_rel_power))
+    return network_relative_power(layers)

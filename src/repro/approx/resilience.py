@@ -31,7 +31,7 @@ import numpy as np
 
 from .backend import BackendLike
 from .layers import ApproxPolicy, bank_eval
-from .power import LayerPower, network_relative_power
+from .power import network_power_for_assignment
 from .registry import get_datapath
 from .specs import BackendSpec, MaterializedBackend, bank_for
 
@@ -103,15 +103,108 @@ def _row(library, mname, layer, acc, layer_counts, spec) -> ResilienceRow:
             network_rel_power=entry.rel_power,
             multiplier_rel_power=entry.rel_power,
             mult_share=1.0, errors=entry.errors.as_dict(), spec=spec)
-    pw = [LayerPower(l, c, mname if l == layer else "exact",
-                     entry.rel_power if l == layer else 1.0)
-          for l, c in layer_counts.items()]
+    # a per-layer row is the one-layer special case of a heterogeneous
+    # assignment; both score power through the same component model
     return ResilienceRow(
         multiplier=mname, layer=layer, accuracy=acc,
-        network_rel_power=network_relative_power(pw),
+        network_rel_power=network_power_for_assignment(
+            layer_counts, {layer: mname}, {mname: entry.rel_power}),
         multiplier_rel_power=entry.rel_power,
         mult_share=layer_counts[layer] / total,
         errors=entry.errors.as_dict(), spec=spec)
+
+
+# ----------------------------------------------------------------------
+# Per-layer component models (autoAx-style, DESIGN.md §2.5)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerComponents:
+    """Per-layer quality/power component models distilled from the
+    Fig. 4 per-layer sweep rows — the prediction stage of the two-stage
+    heterogeneous DSE (autoAx: compose per-layer measurements into
+    network-level estimates, then verify the shortlist exactly).
+
+    ``quality[j, i]`` is the measured network accuracy with ONLY layer
+    ``layers[j]`` running multiplier ``multipliers[i]`` (everything else
+    golden int8); ``rel_power[i]`` is the multiplier's relative power.
+    The composition model is additive in accuracy *drops* (clipped at
+    zero: measurement noise must not predict improvements) and exact in
+    power (count-weighted mean, the same arithmetic the verified points
+    report).
+    """
+
+    layers: tuple[str, ...]
+    multipliers: tuple[str, ...]
+    quality: "np.ndarray"           # (n_layers, n_mult) accuracies
+    rel_power: "np.ndarray"         # (n_mult,)
+    counts: tuple[int, ...]         # per layers[j] mult counts
+    total_count: int                # whole-network mult count
+    baseline: float                 # golden int8 accuracy
+
+    @staticmethod
+    def from_rows(rows: "list[ResilienceRow]", layer_counts: dict,
+                  baseline: float) -> "LayerComponents":
+        """Distill per-layer sweep rows (any order, any coverage) into
+        component matrices.  Missing (layer, multiplier) cells fall back
+        to the baseline accuracy (no measured evidence of damage)."""
+        layers = tuple(dict.fromkeys(
+            r.layer for r in rows if r.layer != "all"))
+        mults = tuple(dict.fromkeys(
+            r.multiplier for r in rows if r.layer != "all"))
+        li = {l: j for j, l in enumerate(layers)}
+        mi = {m: i for i, m in enumerate(mults)}
+        quality = np.full((len(layers), len(mults)), baseline)
+        rel_power = np.ones(len(mults))
+        for r in rows:
+            if r.layer == "all":
+                continue
+            quality[li[r.layer], mi[r.multiplier]] = r.accuracy
+            rel_power[mi[r.multiplier]] = r.multiplier_rel_power
+        return LayerComponents(
+            layers=layers, multipliers=mults, quality=quality,
+            rel_power=rel_power,
+            counts=tuple(int(layer_counts[l]) for l in layers),
+            total_count=int(sum(layer_counts.values())),
+            baseline=float(baseline))
+
+    def drop(self) -> "np.ndarray":
+        """(n_layers, n_mult) per-layer accuracy drops, clipped >= 0."""
+        return np.maximum(self.baseline - self.quality, 0.0)
+
+    def predict_accuracy(self, assign: "np.ndarray") -> float:
+        """Additive-drop estimate for one assignment row (indices into
+        ``multipliers``)."""
+        d = self.drop()
+        return self.baseline - float(
+            sum(d[j, i] for j, i in enumerate(assign)))
+
+    def predict_power(self, assign: "np.ndarray") -> float:
+        """Exact count-weighted power of one assignment row (layers
+        outside ``layers`` are golden int8 at rel power 1.0)."""
+        assigned = sum(c * self.rel_power[i]
+                       for c, i in zip(self.counts, assign))
+        rest = self.total_count - sum(self.counts)
+        if self.total_count == 0:
+            return 1.0
+        return float((assigned + rest) / self.total_count)
+
+    def layer_pareto(self) -> list[list[int]]:
+        """Per layer: multiplier indices non-dominated on
+        (accuracy-drop min, power min) — the layer-wise pruning stage.
+        Candidates are returned sorted by ascending power."""
+        d = self.drop()
+        fronts = []
+        for j in range(len(self.layers)):
+            order = sorted(range(len(self.multipliers)),
+                           key=lambda i: (self.rel_power[i], d[j, i]))
+            front: list[int] = []
+            best = float("inf")
+            for i in order:
+                if d[j, i] < best:
+                    front.append(i)
+                    best = d[j, i]
+            fronts.append(front)
+        return fronts
 
 
 def per_layer_sweep(

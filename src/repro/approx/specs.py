@@ -274,6 +274,113 @@ class LutBank:
         return LutBank(names=names, luts=luts, block_m=block_m)
 
 
+# ----------------------------------------------------------------------
+# PolicyBank: heterogeneous per-layer assignments over one LutBank
+# (DESIGN.md §2.5)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True, eq=False)  # id-hash: ndarray field
+class PolicyBank:
+    """K heterogeneous per-layer multiplier assignments sharing one
+    ``LutBank`` — the *policy axis* of a heterogeneous sweep.
+
+    ``assign[p, j]`` is the index into ``bank.names`` of the multiplier
+    policy ``p`` uses in layer ``layers[j]``; layers not named here run
+    the evaluation's base backend (golden int8 by default).  Row ``p``
+    therefore stands for the serializable
+    ``ApproxPolicy(default=base, overrides=spec_overrides(p))``, and
+    ``repro.approx.layers.policy_bank_eval`` evaluates every row in one
+    compiled program by gathering each layer's LUT lane
+    ``luts[assign[:, j]]`` through the banked kernel — bit-identical to
+    K sequential override evaluations.
+    """
+
+    bank: LutBank
+    layers: tuple[str, ...]
+    assign: np.ndarray                # (n_policies, n_layers) intp
+
+    def __post_init__(self):
+        a = np.asarray(self.assign, dtype=np.int32)
+        if a.ndim != 2 or a.shape[1] != len(self.layers):
+            raise ValueError(
+                f"assign must be (n_policies, {len(self.layers)}), "
+                f"got {a.shape}")
+        if a.size and (a.min() < 0 or a.max() >= self.bank.n_mult):
+            raise ValueError(
+                f"assign indices must be in [0, {self.bank.n_mult}); "
+                f"got range [{a.min()}, {a.max()}]")
+        object.__setattr__(self, "assign", a)
+
+    @property
+    def n_policies(self) -> int:
+        return int(self.assign.shape[0])
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def assignment(self, p: int) -> dict[str, str]:
+        """Row ``p`` as a layer-name -> multiplier-name mapping."""
+        return {layer: self.bank.names[self.assign[p, j]]
+                for j, layer in enumerate(self.layers)}
+
+    def spec_overrides(self, p: int, mode: str = "lut",
+                       variant: str = "ref"
+                       ) -> list[tuple[str, BackendSpec]]:
+        """Serializable ``ApproxPolicy`` overrides for row ``p`` (layer
+        order preserved; first-match-wins is irrelevant because layer
+        names are exact, disjoint patterns)."""
+        return [(layer, BackendSpec(mode=mode, multiplier=name,
+                                    block_m=self.bank.block_m,
+                                    variant=variant))
+                for layer, name in self.assignment(p).items()]
+
+    @staticmethod
+    def from_assignments(assignments, library=None,
+                         layers=None, block_m: int = 512) -> "PolicyBank":
+        """Pack layer->multiplier mappings into one shared bank.
+
+        ``assignments`` is a sequence of dicts; ``layers`` defaults to
+        the union of their keys in first-appearance order.  Every
+        mapping must cover every layer (partial policies are expressed
+        by leaving the layer out of ``layers``, not out of one row).
+        The distinct multiplier names are deduplicated into a single
+        ``bank_for``-cached ``LutBank``.
+        """
+        assignments = list(assignments)
+        if layers is None:
+            layers = []
+            for a in assignments:
+                for name in a:
+                    if name not in layers:
+                        layers.append(name)
+        layers = tuple(layers)
+        names: list[str] = []
+        for a in assignments:
+            missing = [l for l in layers if l not in a]
+            if missing:
+                raise ValueError(
+                    f"assignment {a!r} misses layers {missing}")
+            for l in layers:
+                if a[l] not in names:
+                    names.append(a[l])
+        bank = bank_for(names, library, block_m=block_m)
+        index = {n: i for i, n in enumerate(bank.names)}
+        assign = np.asarray([[index[a[l]] for l in layers]
+                             for a in assignments], dtype=np.int32)
+        return PolicyBank(bank=bank, layers=layers, assign=assign)
+
+    @staticmethod
+    def uniform(names, layers, library=None,
+                block_m: int = 512) -> "PolicyBank":
+        """One row per multiplier name, assigned to every layer — the
+        heterogeneous engine restricted to uniform policies (the
+        equal-assignment consistency axis CI checks)."""
+        names = list(names)
+        return PolicyBank.from_assignments(
+            [{l: n for l in layers} for n in names],
+            library=library, layers=layers, block_m=block_m)
+
+
 _BANK_CACHE: "OrderedDict[tuple, LutBank]" = OrderedDict()
 _BANK_CACHE_MAX = 16
 

@@ -256,3 +256,19 @@ def bank_sharding(n_banks: int, mesh: Optional[Mesh] = None,
     one device."""
     mesh = mesh if mesh is not None else sweep_mesh()
     return NamedSharding(mesh, bank_pspec(n_banks, mesh, axis))
+
+
+def policy_sharding(n_policies: int, mesh: Optional[Mesh] = None,
+                    axis: str = "sweep") -> NamedSharding:
+    """Sharding for the heterogeneous engine's *policy* axis — the
+    leading dim of a ``PolicyBank`` assignment matrix
+    ``(n_policies, n_layers)``.  Pass as
+    ``policy_bank_eval(..., assign_sharding=...)`` /
+    ``explore_heterogeneous(..., assign_sharding=...)``: the LUT bank
+    stays replicated (every lane gathers from it) while the assignment
+    rows — and therefore the whole vmapped per-policy program — split
+    across devices, each verifying ``n_policies / n_devices``
+    candidate compositions.  Same divisibility policy as
+    ``bank_sharding``: non-divisible counts replicate."""
+    mesh = mesh if mesh is not None else sweep_mesh()
+    return NamedSharding(mesh, bank_pspec(n_policies, mesh, axis))

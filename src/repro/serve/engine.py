@@ -14,7 +14,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +30,11 @@ class ServeConfig:
     max_new_tokens: int = 16
     temperature: float = 0.0     # 0 = greedy
     seed: int = 0
-    # Per-request accelerator selection: a serialized ApproxPolicy
-    # (``ApproxPolicy.to_json_dict()``); None = the engine default.
-    policy: Optional[dict] = None
+    # Per-request accelerator selection: a serialized ApproxPolicy —
+    # the ``to_json_dict()`` dict or the ``to_json()`` string, either
+    # uniform or heterogeneous (one override per layer, e.g. an
+    # ``explore_heterogeneous`` selection); None = the engine default.
+    policy: Optional[Union[dict, str]] = None
 
 
 class Engine:

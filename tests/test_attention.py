@@ -22,6 +22,7 @@ def _setup(arch="qwen1.5-0.5b", **over):
     return cfg_v, cfg_c, params
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(st.integers(1, 40), st.integers(1, 3), st.integers(0, 2 ** 16))
 def test_chunked_equals_vanilla_selfattn(s, b, seed):
@@ -59,6 +60,7 @@ def test_chunked_equals_vanilla_cache_paths():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_chunked_gradients_finite():
     cfg_v, cfg_c, params = _setup()
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 17, cfg_v.d_model),

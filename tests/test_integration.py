@@ -72,6 +72,7 @@ def test_engine_generates(tiny_lm):
     assert (out >= 0).all() and (out < cfg.vocab).all()
 
 
+@pytest.mark.slow
 def test_engine_approx_vs_exact_agree_mostly(tiny_lm):
     """int8-exact vs rank-4 approx datapath: same greedy tokens for an
     untrained model most of the time (faithful emulation)."""
@@ -88,6 +89,7 @@ def test_engine_approx_vs_exact_agree_mostly(tiny_lm):
     assert (out_a == out_b).mean() >= 0.5
 
 
+@pytest.mark.slow
 def test_engine_per_request_policy_selection(tiny_lm):
     """One engine, two requests with different serialized policies:
     the accelerator is selected per request, and repeated policies
@@ -114,6 +116,7 @@ def test_engine_per_request_policy_selection(tiny_lm):
         "repeated policy must reuse the jitted steps"
 
 
+@pytest.mark.slow
 def test_resilience_ordering_on_trained_model():
     """Paper's qualitative claim: aggressive multipliers degrade a
     TRAINED classifier; near-exact ones do not."""

@@ -26,6 +26,7 @@ def _batch_for(cfg, b, s):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list(ARCHS))
 def test_arch_smoke_train_step(arch):
     cfg = get_config(arch).reduced()
@@ -102,6 +103,7 @@ def test_resnet_depths():
         assert cfg.depth == depth
 
 
+@pytest.mark.slow
 def test_resnet_approx_policy_changes_output():
     """A very aggressive approximate multiplier must change logits; the
     exact-LUT multiplier must not (vs int8)."""

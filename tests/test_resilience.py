@@ -64,6 +64,7 @@ def sweep_setup():
     return lib, cfg, eval_fn
 
 
+@pytest.mark.slow
 def test_all_layers_sweep(sweep_setup):
     lib, cfg, eval_fn = sweep_setup
     rows = all_layers_sweep(eval_fn, resnet.layer_mult_counts(cfg),
@@ -77,6 +78,7 @@ def test_all_layers_sweep(sweep_setup):
         assert 0.0 <= r.accuracy <= 1.0
 
 
+@pytest.mark.slow
 def test_per_layer_sweep_structure(sweep_setup):
     lib, cfg, eval_fn = sweep_setup
     counts = {k: v for k, v in

@@ -50,6 +50,7 @@ def resnet_eval(lib):
     return cfg, BankableEval(fn=fn, traceable=traceable), traces
 
 
+@pytest.mark.slow
 def test_all_layers_batched_bit_identical_and_one_trace(lib, resnet_eval):
     cfg, eval_fn, traces = resnet_eval
     counts = resnet.layer_mult_counts(cfg)
@@ -65,6 +66,7 @@ def test_all_layers_batched_bit_identical_and_one_trace(lib, resnet_eval):
         assert s.spec == b.spec and s.errors == b.errors
 
 
+@pytest.mark.slow
 def test_per_layer_batched_bit_identical(lib, resnet_eval):
     cfg, eval_fn, traces = resnet_eval
     counts = dict(list(resnet.layer_mult_counts(cfg).items())[:2])
@@ -88,6 +90,7 @@ def test_batch_requires_bankable_eval(lib):
                         "lowrank")
 
 
+@pytest.mark.slow
 def test_explore_batch_matches_sequential_and_seeds_cache(lib, resnet_eval):
     cfg, eval_fn, _ = resnet_eval
     counts = dict(list(resnet.layer_mult_counts(cfg).items())[:2])
