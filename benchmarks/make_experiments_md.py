@@ -1,6 +1,6 @@
-"""Regenerate the §Dry-run, §Roofline and §Heterogeneous tables of
-EXPERIMENTS.md from the result JSONs (idempotent; §Perf and prose are
-maintained by hand between the markers)."""
+"""Regenerate the §Dry-run, §Roofline, §Heterogeneous and §Wide tables
+of EXPERIMENTS.md from the result JSONs (idempotent; §Perf and prose
+are maintained by hand between the markers)."""
 from __future__ import annotations
 
 import glob
@@ -160,6 +160,50 @@ def hetero_table() -> str:
     return "\n".join(rows)
 
 
+WIDE_PATH = os.path.join(os.path.dirname(__file__), "results",
+                         "BENCH_wide.json")
+
+
+def wide_table() -> str:
+    """Mixed-width Pareto front from BENCH_wide.json (written by
+    `python -m benchmarks.wide_width_pareto`)."""
+    if not os.path.exists(WIDE_PATH):
+        return "(run `python -m benchmarks.wide_width_pareto` first)"
+    with open(WIDE_PATH) as f:
+        r = json.load(f)
+    ev = r["evaluation"]
+    rows = [f"Baseline (golden int8) accuracy "
+            f"{100 * r['baseline_accuracy']:.2f}%, quality bound "
+            f"{100 * r['quality_bound']:.1f} points, "
+            f"{ev['n_candidates']} candidates "
+            f"({ev['n_wide']} composed wide)"
+            f"{' (quick)' if r.get('quick') else ''}.  Power is vs "
+            "exact 8-bit (`rel_power_map(ref='mul8u_exact')`); "
+            "fidelity is mean |logit error| vs the f32 model.", "",
+            "| front | multiplier | W | power% | acc% | logit MAE |",
+            "|---|---|---|---|---|---|"]
+    for kind, key in (("accuracy", "pareto_front_accuracy"),
+                      ("fidelity", "pareto_front_fidelity")):
+        for p in r.get(key, []):
+            fid = p.get("logit_mae_vs_f32")
+            rows.append(
+                f"| {kind} | {p['multiplier']} | {p['bit_width']} "
+                f"| {100 * p['network_rel_power']:.1f} "
+                f"| {100 * p['accuracy']:.2f} "
+                f"| {fid if fid is not None else '-'} |")
+    beyond = r.get("wide_beyond_8bit_fidelity", [])
+    if beyond:
+        rows += ["", f"{len(beyond)} composed wide point(s) beat every "
+                 "8-bit candidate's fidelity within the bound — the "
+                 "quantization-noise axis the 8-bit sweep cannot "
+                 f"reach: {', '.join(beyond)}."]
+    rows += ["", f"Composed-wide sweep: {ev['wide_sequential_s']}s "
+             f"sequential vs {ev['wide_batched_s']}s in one banked "
+             f"program ({ev['speedup']}x, bit_identical="
+             f"{ev['bit_identical']})."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -178,6 +222,7 @@ def main() -> None:
     text = replace_section(text, "ROOFLINE", roofline_table(results))
     text = replace_section(text, "PERF", perf_table())
     text = replace_section(text, "HETERO", hetero_table())
+    text = replace_section(text, "WIDE", wide_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

@@ -1,6 +1,7 @@
 from .quant import QuantParams, quantize, dequantize, calibrate
-from .registry import (Datapath, available_datapaths, get_datapath,
-                       register_datapath)
+from .power import rel_power_map
+from .registry import (Datapath, available_datapaths, composed_product,
+                       get_datapath, register_datapath)
 from .specs import (BackendSpec, LutBank, MaterializedBackend, PolicyBank,
                     bank_for, canonicalize, materialize,
                     materialize_cache_stats, clear_materialize_cache)

@@ -148,8 +148,12 @@ def _from_legacy(be: MatmulBackend) -> MaterializedBackend:
 # ----------------------------------------------------------------------
 def _quantized_matmul(x2d: jax.Array, w: jax.Array,
                       backend: MaterializedBackend) -> jax.Array:
-    qp_a = calibrate(x2d)
-    qp_w = calibrate(w)
+    # operand width of the emulated datapath (8 for the paper's
+    # baseline; 12/16 for composed wide entries, DESIGN.md §2.6).  May
+    # be a traced per-lane scalar inside a mixed-width banked eval.
+    bits = backend.consts.get("bits", 8)
+    qp_a = calibrate(x2d, bits=bits)
+    qp_w = calibrate(w, bits=bits)
     qa = quantize(x2d, qp_a)
     qw = quantize(w, qp_w)
     za, zw = qp_a.zero_point, qp_w.zero_point

@@ -32,7 +32,8 @@ from typing import Callable, Mapping, Optional
 import numpy as np
 
 from .layers import ApproxPolicy, policy_bank_eval, policy_for_lane
-from .power import network_power_for_assignment
+from .power import (auto_rel_power, network_power_for_assignment,
+                    rel_power_map)
 from .resilience import (LayerComponents, ResilienceRow, all_layers_sweep,
                          can_bank, per_layer_sweep)
 from .specs import BackendSpec, PolicyBank
@@ -211,10 +212,17 @@ def explore(
     cache: Optional[dict] = None,
     batch: bool = False,
     sharding=None,
+    rel_power=None,
 ) -> ExploreResult:
     """One-call DSE: baseline + Table II + Fig. 4 sweeps over the
     library's case-study multipliers (or ``multipliers``), with cached
     evaluations.
+
+    ``multipliers`` may mix operand widths (8-bit entries alongside
+    composed 12/16-bit ones, DESIGN.md §2.6); batched sweeps stay O(1)
+    compiled programs either way, and mixed sets are auto-rebased onto
+    one comparable power axis (``power.auto_rel_power``; pass
+    ``rel_power`` to choose the reference yourself).
 
     Sequential (default) evaluation runs one ``eval_fn`` call per design
     point through a policy-keyed cache: pass the same ``cache`` dict
@@ -256,7 +264,7 @@ def explore(
         rows = all_layers_sweep(eval_fn if batch else run, layer_counts,
                                 multipliers, library, mode=mode,
                                 variant=variant, batch=batch,
-                                sharding=sharding)
+                                sharding=sharding, rel_power=rel_power)
         if batch:
             _seed_cache(cache, rows, golden)
         result.all_layers = [DesignPoint.from_row(r) for r in rows]
@@ -264,7 +272,7 @@ def explore(
         rows = per_layer_sweep(eval_fn if batch else run, layer_counts,
                                multipliers, library, mode=mode,
                                base=golden, variant=variant, batch=batch,
-                               sharding=sharding)
+                               sharding=sharding, rel_power=rel_power)
         if batch:
             _seed_cache(cache, rows, golden)
         result.per_layer = [DesignPoint.from_row(r) for r in rows]
@@ -403,6 +411,7 @@ def verify_assignments(
     sharding=None,
     assign_sharding=None,
     cache: Optional[dict] = None,
+    rel_power=None,
 ) -> list[DesignPoint]:
     """Verification stage: measure every candidate assignment EXACTLY.
 
@@ -436,8 +445,9 @@ def verify_assignments(
             cache.setdefault(
                 policy_for_lane(pbank, p, mode=mode,
                                 variant=variant).cache_key(), acc)
-    rel_power = {name: library.entries[name].rel_power
-                 for name in pbank.bank.names}
+    if rel_power is None:
+        rel_power = (auto_rel_power(library, pbank.bank.names)
+                     or rel_power_map(library, pbank.bank.names))
     points = []
     for p, acc in enumerate(accs):
         a = pbank.assignment(p)
@@ -465,8 +475,16 @@ def explore_heterogeneous(
     batch: bool = True,
     sharding=None,
     assign_sharding=None,
+    rel_power=None,
 ) -> ExploreResult:
     """Two-stage heterogeneous DSE (autoAx-style, DESIGN.md §2.5).
+
+    Width-generic (DESIGN.md §2.6): ``multipliers`` may mix 8-bit and
+    composed 12/16-bit entries, so compositions can pick a DIFFERENT
+    width per layer; mixed sets auto-rebase power onto a common
+    reference (``power.auto_rel_power``) in both the component models
+    and the verified points — pass ``rel_power`` to pick the
+    reference yourself.
 
     Stage 1 (predict): run the per-layer sweep (batched when the eval
     supports it) and distill it into ``LayerComponents`` — or reuse
@@ -502,7 +520,8 @@ def explore_heterogeneous(
         rows = per_layer_sweep(eval_fn if do_batch else run, layer_counts,
                                multipliers, library, mode=mode,
                                base=golden, variant=variant,
-                               batch=do_batch, sharding=sharding)
+                               batch=do_batch, sharding=sharding,
+                               rel_power=rel_power)
         if do_batch:
             _seed_cache(cache, rows, golden)
         components = LayerComponents.from_rows(rows, layer_counts,
@@ -526,7 +545,8 @@ def explore_heterogeneous(
     hetero = verify_assignments(
         eval_fn, assignments, layer_counts, library, mode=mode,
         variant=variant, batch=batch, sharding=sharding,
-        assign_sharding=assign_sharding, cache=cache)
+        assign_sharding=assign_sharding, cache=cache,
+        rel_power=rel_power)
 
     result = ExploreResult(baseline_accuracy=baseline,
                            per_layer=per_layer_points,

@@ -144,19 +144,41 @@ EXACT_POLICY = ApproxPolicy(default=MatmulBackend(mode="f32"))
 # (DESIGN.md §2.4)
 # ----------------------------------------------------------------------
 def _bank_lane_backend(lut: jax.Array, bank: LutBank, mode: str,
-                       variant: str) -> MaterializedBackend:
+                       variant: str, mask=None,
+                       bits=None) -> MaterializedBackend:
     """Backend for ONE vmap lane: a ``mode``-datapath backend whose LUT
     const is a traced ``(256, 256)`` slice of the bank (any datapath
     declaring ``bankable`` consumes ``consts['lut']`` this way).
     ``ste=False`` because banked evaluation is forward-only — routing
     around the custom_vjp wrapper keeps traced consts out of its
     non-differentiable spec argument (the forward math is identical
-    either way)."""
+    either way).
+
+    Width-generic banks (``bank.any_wide``) additionally thread the
+    lane's traced ``bits`` (quantization width) and 2W-bit product
+    ``mask`` (0 = narrow lane) plus the bank's static reduction tree,
+    so one compiled program mixes 8-bit and composed 12/16-bit lanes
+    (DESIGN.md §2.6)."""
     dp = get_datapath(mode if variant == "ref" else f"{mode}_{variant}")
     spec = BackendSpec(mode=mode, multiplier="<bank>",
                        block_m=bank.block_m, ste=False, variant=variant)
-    return MaterializedBackend(spec=spec, datapath=dp,
-                               consts={"lut": lut, "block_m": bank.block_m})
+    consts: dict = {"lut": lut, "block_m": bank.block_m}
+    if bank.any_wide:
+        from repro.core.families import parse_reduce
+        consts.update(composed=True, bits=bits, mask=mask,
+                      reduce=parse_reduce(bank.reduce))
+    return MaterializedBackend(spec=spec, datapath=dp, consts=consts)
+
+
+def _lane_sharding(sharding):
+    """1-D sharding for a wide bank's per-lane aux arrays, derived
+    from the bank's (n, 256, 256) sharding (None when not derivable,
+    e.g. a non-NamedSharding)."""
+    from jax.sharding import NamedSharding
+    if isinstance(sharding, NamedSharding):
+        from repro.launch.mesh import lane_sharding
+        return lane_sharding(sharding)
+    return None
 
 
 def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
@@ -197,14 +219,34 @@ def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
     if layer_pattern is not None and base is None:
         base = BackendSpec.golden().materialize()
 
-    def lane(lut):
-        mb = _bank_lane_backend(lut, bank, mode, variant)
+    def policy_for(mb):
         if layer_pattern is None:
-            policy = ApproxPolicy(default=mb)
-        else:
-            policy = ApproxPolicy(default=base,
-                                  overrides=[(layer_pattern, mb)])
-        return fn(policy)
+            return ApproxPolicy(default=mb)
+        return ApproxPolicy(default=base,
+                            overrides=[(layer_pattern, mb)])
+
+    if bank.any_wide:
+        # mixed-width bank: per-lane quantization width + product mask
+        # (selector + 2W-bit truncation) ride the vmapped axis
+        # (DESIGN.md §2.6)
+        bits = jnp.asarray(bank.lane_bits, jnp.int32)
+        masks = jnp.asarray(bank.lane_masks, jnp.uint32)
+        if sharding is not None:
+            aux = _lane_sharding(sharding)
+            if aux is not None:
+                bits = jax.device_put(bits, aux)
+                masks = jax.device_put(masks, aux)
+
+        def lane_w(lut, lane_bits, lane_mask):
+            mb = _bank_lane_backend(lut, bank, mode, variant,
+                                    mask=lane_mask, bits=lane_bits)
+            return fn(policy_for(mb))
+
+        return jax.jit(jax.vmap(lane_w))(luts, bits, masks)
+
+    def lane(lut):
+        return fn(policy_for(_bank_lane_backend(lut, bank, mode,
+                                                variant)))
 
     return jax.jit(jax.vmap(lane))(luts)
 
@@ -263,12 +305,24 @@ def policy_bank_eval(fn, pbank: PolicyBank, *, mode: str = "lut",
         assign = jax.device_put(assign, assign_sharding)
     if base is None:
         base = BackendSpec.golden().materialize()
+    any_wide = pbank.bank.any_wide
+    bank_bits = jnp.asarray(pbank.bank.lane_bits, jnp.int32)
+    bank_masks = jnp.asarray(pbank.bank.lane_masks, jnp.uint32)
 
     def lane(assign_row):
         overrides = []
         for j, layer in enumerate(pbank.layers):
             lut = jnp.take(luts, assign_row[j], axis=0)   # (256,256)
-            mb = _bank_lane_backend(lut, pbank.bank, mode, variant)
+            if any_wide:
+                # width-generic: each layer gathers its multiplier's
+                # quantization width + product mask alongside the
+                # tile LUT (DESIGN.md §2.6)
+                mb = _bank_lane_backend(
+                    lut, pbank.bank, mode, variant,
+                    mask=jnp.take(bank_masks, assign_row[j]),
+                    bits=jnp.take(bank_bits, assign_row[j]))
+            else:
+                mb = _bank_lane_backend(lut, pbank.bank, mode, variant)
             overrides.append((layer, mb))
         policy = ApproxPolicy(default=base, overrides=overrides)
         return fn(policy)

@@ -11,11 +11,20 @@ point (DESIGN.md §2.5): it scores an arbitrary layer-name -> multiplier
 mapping, which is how both the per-layer resilience rows (a one-layer
 assignment) and the heterogeneous DSE (a full assignment) account power
 through ONE code path.
+
+Cross-width accounting (DESIGN.md §2.6): ``rel_power`` in the library
+is *same-width* relative (a 16-bit entry's power over the exact 16-bit
+multiplier) — the paper's Table II convention.  Mixed-width sweeps need
+a COMMON reference, so ``rel_power_map(..., ref=...)`` rebases every
+entry onto one circuit's absolute 45 nm power (typically
+``mul8u_exact``, the golden datapath): a composed 16-bit multiplier
+then correctly costs ~4x an 8-bit one (four tiles + the reduction
+tree) instead of looking same-priced.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Mapping
+from typing import Mapping, Optional
 
 
 @dataclass(frozen=True)
@@ -40,6 +49,48 @@ def per_layer_share(layers: list[LayerPower]) -> dict[str, float]:
         # multiplications means no layer owns a share of them
         return {l.name: 0.0 for l in layers}
     return {l.name: l.mult_count / total for l in layers}
+
+
+def rel_power_map(library, names,
+                  ref: Optional[str] = None) -> dict[str, float]:
+    """Per-multiplier relative power for a candidate set.
+
+    ``ref=None`` reads the library's same-width ``rel_power`` (the
+    paper's convention — correct for single-width sweeps).  With
+    ``ref`` set (e.g. ``"mul8u_exact"``), every entry is rebased onto
+    that circuit's absolute 45 nm power, making MIXED-WIDTH candidate
+    sets comparable on one axis: ``power(name) / power(ref)``.
+    Raises ``UnknownCircuitError`` on missing names.
+    """
+    if ref is None:
+        return {n: library.entry(n).rel_power for n in names}
+    ref_power = library.entry(ref).cost.power
+    if ref_power <= 0:
+        raise ValueError(f"reference circuit {ref!r} has no power")
+    return {n: library.entry(n).cost.power / ref_power for n in names}
+
+
+def auto_rel_power(library, names) -> Optional[dict[str, float]]:
+    """Default power map for a candidate set: None for single-width
+    sets (the library's same-width convention applies), a
+    common-reference ``rel_power_map`` for MIXED-width sets — without
+    this, a 16-bit entry's rel_power (vs exact *16-bit*) would be
+    silently compared against 8-bit entries' (vs exact 8-bit) and a
+    ~5x-more-expensive circuit could win "lowest power".  The
+    reference is the narrowest width's exact multiplier; raises when
+    the library lacks it (pass an explicit ``rel_power`` then).
+    """
+    widths = {library.entry(n).width for n in names}
+    if len(widths) <= 1:
+        return None
+    ref = f"mul{min(widths)}u_exact"
+    if ref not in library.entries:
+        raise ValueError(
+            f"mixed-width candidate set (widths {sorted(widths)}) "
+            f"needs a common power reference, but {ref!r} is not in "
+            "the library — pass rel_power=rel_power_map(library, "
+            "names, ref=<your reference circuit>)")
+    return rel_power_map(library, names, ref=ref)
 
 
 def network_power_for_assignment(

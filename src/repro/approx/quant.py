@@ -1,9 +1,10 @@
-"""uint8 affine quantization for approximate-multiplier emulation.
+"""Unsigned affine quantization for approximate-multiplier emulation.
 
-The library's multipliers are *unsigned* 8-bit (mul8u family), so both
-operands are quantized asymmetrically to [0, 255]:
+The library's multipliers are *unsigned* W-bit (mul8u/mul12u/mul16u
+families), so both operands are quantized asymmetrically to
+[0, 2^W - 1]:
 
-    q = clip(round(x / s) + zp, 0, 255),      x ≈ s * (q - zp)
+    q = clip(round(x / s) + zp, 0, 2^W - 1),      x ≈ s * (q - zp)
 
 and an exact product decomposes as
 
@@ -17,39 +18,85 @@ MAC array, and is exactly how TFApprox composes with TF quantization.
 Quantization is *dynamic* per-tensor by default (scales derived from the
 tensor inside the jitted computation); static calibrated params can be
 passed instead.
+
+``bits`` is width-generic (DESIGN.md §2.6): 8 for the paper's baseline
+datapath, 12/16 for composed wide datapaths.  It may be a Python int
+(the common, statically-known case) or a traced scalar — mixed-width
+LUT banks vmap ``calibrate`` over a per-lane ``bits`` array so one
+compiled program quantizes every lane at its own width.  At
+``bits=8`` the arithmetic is bit-identical to the historical uint8
+path (``qmax = exp2(8) - 1`` is exactly ``255.0`` in float32).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+Bits = Union[int, jax.Array]
+
 
 class QuantParams(NamedTuple):
     scale: jax.Array        # scalar f32
-    zero_point: jax.Array   # scalar int32 in [0, 255]
+    zero_point: jax.Array   # scalar int32 in [0, qmax]
+    qmax: jax.Array = 255.0  # scalar f32, 2^bits - 1
 
 
-def calibrate(x: jax.Array, eps: float = 1e-8) -> QuantParams:
-    """Min/max affine calibration to the full uint8 range."""
+#: Widths a TRACED ``bits`` scalar may take (the bankable datapath
+#: widths).  Static Python-int widths are unrestricted.
+TRACED_WIDTHS = (8, 12, 16)
+
+
+def qmax_for(bits: Bits) -> jax.Array:
+    """``2^bits - 1`` as an f32 scalar (exact for every width <= 24);
+    traceable when ``bits`` is a per-lane scalar in ``TRACED_WIDTHS``."""
+    if isinstance(bits, int):
+        return jnp.float32((1 << bits) - 1)
+    preds = [jnp.asarray(bits) == b for b in TRACED_WIDTHS]
+    vals = [jnp.float32((1 << b) - 1) for b in TRACED_WIDTHS]
+    return jnp.select(preds, vals, vals[-1])
+
+
+def calibrate(x: jax.Array, bits: Bits = 8,
+              eps: float = 1e-8) -> QuantParams:
+    """Min/max affine calibration to the full unsigned ``bits`` range.
+
+    A traced ``bits`` (mixed-width bank lane) selects among
+    CONSTANT-divisor scale computations — one per ``TRACED_WIDTHS``
+    entry — rather than dividing by a runtime ``qmax``: XLA folds
+    division by a compile-time constant differently (reciprocal
+    strength reduction) from a runtime division, and the banked engine
+    promises every lane is bit-identical to static calibration at that
+    lane's width.
+    """
     lo = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
     hi = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
-    scale = jnp.maximum((hi - lo) / 255.0, eps)
-    zp = jnp.clip(jnp.round(-lo / scale), 0, 255).astype(jnp.int32)
-    return QuantParams(scale=scale, zero_point=zp)
+    qmax = qmax_for(bits)
+    if isinstance(bits, int):
+        scale = jnp.maximum((hi - lo) / qmax, eps)
+    else:
+        scale = jnp.select(
+            [jnp.asarray(bits) == b for b in TRACED_WIDTHS],
+            [jnp.maximum((hi - lo) / jnp.float32((1 << b) - 1), eps)
+             for b in TRACED_WIDTHS],
+            jnp.maximum((hi - lo) / jnp.float32(
+                (1 << TRACED_WIDTHS[-1]) - 1), eps))
+    zp = jnp.clip(jnp.round(-lo / scale), 0, qmax).astype(jnp.int32)
+    return QuantParams(scale=scale, zero_point=zp, qmax=qmax)
 
 
 def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
     q = jnp.round(x.astype(jnp.float32) / qp.scale) + qp.zero_point
-    return jnp.clip(q, 0, 255).astype(jnp.int32)
+    return jnp.clip(q, 0, qp.qmax).astype(jnp.int32)
 
 
 def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
     return (q - qp.zero_point).astype(jnp.float32) * qp.scale
 
 
-def fake_quant(x: jax.Array, qp: Optional[QuantParams] = None) -> jax.Array:
+def fake_quant(x: jax.Array, qp: Optional[QuantParams] = None,
+               bits: Bits = 8) -> jax.Array:
     """Quantize-dequantize round trip (for QAT-style experiments)."""
-    qp = qp or calibrate(x)
+    qp = qp or calibrate(x, bits=bits)
     return dequantize(quantize(x, qp), qp)

@@ -31,7 +31,7 @@ import numpy as np
 
 from .backend import BackendLike
 from .layers import ApproxPolicy, bank_eval
-from .power import network_power_for_assignment
+from .power import auto_rel_power, network_power_for_assignment
 from .registry import get_datapath
 from .specs import BackendSpec, MaterializedBackend, bank_for
 
@@ -94,22 +94,28 @@ def _backends_for(multiplier_names, library, mode: str, rank=None,
     return out
 
 
-def _row(library, mname, layer, acc, layer_counts, spec) -> ResilienceRow:
-    entry = library.entries[mname]
+def _row(library, mname, layer, acc, layer_counts, spec,
+         rel_power=None) -> ResilienceRow:
+    entry = library.entry(mname)
+    # rel_power overrides rebase power onto a common reference for
+    # mixed-width sweeps (power.rel_power_map, DESIGN.md §2.6); the
+    # default is the library's same-width convention
+    rp = (rel_power[mname] if rel_power is not None
+          else entry.rel_power)
     total = sum(layer_counts.values())
     if layer == "all":
         return ResilienceRow(
             multiplier=mname, layer="all", accuracy=acc,
-            network_rel_power=entry.rel_power,
-            multiplier_rel_power=entry.rel_power,
+            network_rel_power=rp,
+            multiplier_rel_power=rp,
             mult_share=1.0, errors=entry.errors.as_dict(), spec=spec)
     # a per-layer row is the one-layer special case of a heterogeneous
     # assignment; both score power through the same component model
     return ResilienceRow(
         multiplier=mname, layer=layer, accuracy=acc,
         network_rel_power=network_power_for_assignment(
-            layer_counts, {layer: mname}, {mname: entry.rel_power}),
-        multiplier_rel_power=entry.rel_power,
+            layer_counts, {layer: mname}, {mname: rp}),
+        multiplier_rel_power=rp,
         mult_share=layer_counts[layer] / total,
         errors=entry.errors.as_dict(), spec=spec)
 
@@ -217,6 +223,7 @@ def per_layer_sweep(
     variant: str = "ref",
     batch: bool = False,
     sharding=None,
+    rel_power=None,
 ) -> list[ResilienceRow]:
     """Fig. 4: one layer approximated at a time.
 
@@ -228,8 +235,16 @@ def per_layer_sweep(
     O(n_layers * n_mult).  Accuracies are bit-identical between the two
     paths; ``sharding`` optionally spreads the bank axis across devices
     (``repro.launch.mesh.bank_sharding``).
+
+    ``multiplier_names`` may MIX operand widths (8-bit entries next to
+    composed 12/16-bit ones, DESIGN.md §2.6) — the bank stays one
+    compiled program per layer either way, and power is auto-rebased
+    onto a common reference (``power.auto_rel_power``) unless an
+    explicit ``rel_power`` map is given.
     """
     base = base if base is not None else BackendSpec.golden().materialize()
+    if rel_power is None:
+        rel_power = auto_rel_power(library, multiplier_names)
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
     rows = []
@@ -243,14 +258,15 @@ def per_layer_sweep(
                                         sharding=sharding))
             for mname, acc in zip(multiplier_names, accs):
                 rows.append(_row(library, mname, layer, float(acc),
-                                 layer_counts, backends[mname].spec))
+                                 layer_counts, backends[mname].spec,
+                                 rel_power))
         return rows
     for layer in layer_counts:
         for mname, be in backends.items():
             policy = ApproxPolicy(default=base, overrides=[(layer, be)])
             acc = float(eval_fn(policy))
             rows.append(_row(library, mname, layer, acc, layer_counts,
-                             be.spec))
+                             be.spec, rel_power))
     return rows
 
 
@@ -263,6 +279,7 @@ def all_layers_sweep(
     variant: str = "ref",
     batch: bool = False,
     sharding=None,
+    rel_power=None,
 ) -> list[ResilienceRow]:
     """Table II: the same multiplier in every (conv) layer.
 
@@ -272,7 +289,14 @@ def all_layers_sweep(
     of ``len(multiplier_names)``, bit-identical accuracies to the
     sequential path.  ``sharding`` optionally spreads the bank axis
     across devices.
+
+    Width-generic: mixed 8/12/16-bit candidate sets bank into the same
+    O(1) program (per-lane widths ride the vmapped axis, DESIGN.md
+    §2.6), with power auto-rebased onto a common reference
+    (``power.auto_rel_power``) unless ``rel_power`` overrides it.
     """
+    if rel_power is None:
+        rel_power = auto_rel_power(library, multiplier_names)
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
     if batch:
@@ -281,14 +305,14 @@ def all_layers_sweep(
         accs = np.asarray(bank_eval(traceable, bank, mode=mode,
                                     variant=variant, sharding=sharding))
         return [_row(library, mname, "all", float(acc), layer_counts,
-                     backends[mname].spec)
+                     backends[mname].spec, rel_power)
                 for mname, acc in zip(multiplier_names, accs)]
     rows = []
     for mname, be in backends.items():
         policy = ApproxPolicy(default=be)
         acc = float(eval_fn(policy))
         rows.append(_row(library, mname, "all", acc, layer_counts,
-                         be.spec))
+                         be.spec, rel_power))
     return rows
 
 

@@ -39,6 +39,14 @@ class BackendSpec:
     implementation ("ref" = jnp reference, "pallas" = Pallas kernel).
     ``rank=None`` means auto (smallest R with negligible decomposition
     error, resolved at pack time).
+
+    Width-generic datapaths (DESIGN.md §2.6): ``bit_width`` declares
+    the multiplier's operand width (None = infer from the library
+    entry; a set value is VALIDATED against the entry at pack time),
+    and ``reduce_adder`` optionally declares the composed shift/add
+    tree's adder family ("exact", "loa4", "trunc3", or a library adder
+    name) — also validated against the composed entry's recipe, so a
+    policy JSON carries the full datapath description self-contained.
     """
 
     mode: str = "bf16"
@@ -47,11 +55,20 @@ class BackendSpec:
     block_m: int = 512
     ste: bool = True
     variant: str = "ref"
+    bit_width: Optional[int] = None
+    reduce_adder: Optional[str] = None
 
     def __post_init__(self):
         if self.variant not in _VARIANTS:
             raise ValueError(f"variant must be one of {_VARIANTS}, "
                              f"got {self.variant!r}")
+        if self.bit_width is not None and not 8 <= self.bit_width <= 16:
+            raise ValueError(
+                f"bit_width must be in [8, 16] (8-bit direct LUTs, "
+                f"composed tiles above), got {self.bit_width}")
+        if self.reduce_adder is not None:
+            from repro.core.families import parse_reduce
+            parse_reduce(self.reduce_adder)   # raises on bad tokens
 
     # -- constructors ---------------------------------------------------
     @staticmethod
@@ -66,9 +83,10 @@ class BackendSpec:
     @staticmethod
     def from_library(multiplier: str, mode: str = "lut",
                      rank: Optional[int] = None,
-                     variant: str = "ref") -> "BackendSpec":
+                     variant: str = "ref",
+                     bit_width: Optional[int] = None) -> "BackendSpec":
         return BackendSpec(mode=mode, multiplier=multiplier, rank=rank,
-                           variant=variant)
+                           variant=variant, bit_width=bit_width)
 
     # -- derived --------------------------------------------------------
     @property
@@ -171,7 +189,8 @@ def _library_key(library) -> int:
 
 
 _SPEC_FIELD_DEFAULTS = {"multiplier": "mul8u_exact", "rank": None,
-                        "block_m": 512}
+                        "block_m": 512, "bit_width": None,
+                        "reduce_adder": None}
 
 
 def canonicalize(spec: BackendSpec) -> BackendSpec:
@@ -230,7 +249,7 @@ def materialize(spec: BackendSpec, library=None) -> MaterializedBackend:
 # ----------------------------------------------------------------------
 @dataclass(frozen=True, eq=False)  # id-hash: cache guarantees uniqueness
 class LutBank:
-    """A stack of product LUTs — the *multiplier axis* of a resilience
+    """A stack of tile LUTs — the *multiplier axis* of a resilience
     sweep packed as one ``(n_mult, 256, 256)`` int32 device constant.
 
     Banks are what the batched resilience engine vmaps over: lane ``i``
@@ -239,39 +258,114 @@ class LutBank:
     evaluating sequentially.  Build through ``bank_for`` to share banks
     across sweeps of the same (library, names, block_m) — the bank
     analogue of the per-spec materialization cache.
+
+    Width-generic (DESIGN.md §2.6): lanes may MIX operand widths.  An
+    8-bit lane's slice is its own product LUT; a composed wide lane's
+    slice is its composition TILE's 256x256 LUT, with the lane's
+    operand width recorded in ``bit_widths`` (the banked engines
+    quantize and compose per lane from these).  All wide lanes of one
+    bank must share a reduction tree (``reduce``) — the shift/add tree
+    is compiled statically into the one banked program.
     """
 
     names: tuple[str, ...]
-    luts: np.ndarray                  # (n_mult, 256, 256) int32
+    luts: np.ndarray                  # (n_mult, 256, 256) int32 tiles
     block_m: int = 512
+    bit_widths: Optional[tuple[int, ...]] = None   # None = all 8-bit
+    reduce: str = "exact"
 
     def __post_init__(self):
         if self.luts.ndim != 3 or self.luts.shape[1:] != (256, 256):
             raise ValueError(
                 f"LutBank wants (n, 256, 256) LUTs, got {self.luts.shape}"
-                " — banked sweeps are defined for 8-bit multipliers")
+                " — banked sweeps run on 256x256 tile LUTs (8-bit "
+                "entries directly, composed wide entries via their "
+                "tile; DESIGN.md §2.6)")
         if len(self.names) != self.luts.shape[0]:
             raise ValueError("one name per LUT slice required")
+        if self.bit_widths is not None:
+            if len(self.bit_widths) != len(self.names):
+                raise ValueError("one bit width per lane required")
+            from repro.approx.quant import TRACED_WIDTHS
+            bad = sorted(set(self.bit_widths) - set(TRACED_WIDTHS))
+            if bad:
+                # the traced calibrate select would silently fall back
+                # to its widest branch for any other width
+                raise ValueError(
+                    f"unsupported lane widths {bad}; banked engines "
+                    f"run per-lane widths from {TRACED_WIDTHS}")
 
     @property
     def n_mult(self) -> int:
         return len(self.names)
 
+    @property
+    def lane_bits(self) -> np.ndarray:
+        """(n_mult,) per-lane operand widths (int32)."""
+        if self.bit_widths is None:
+            return np.full(self.n_mult, 8, dtype=np.int32)
+        return np.asarray(self.bit_widths, dtype=np.int32)
+
+    @property
+    def any_wide(self) -> bool:
+        """True when any lane runs the composed (>8-bit) datapath —
+        the static dispatch bit of the banked engines."""
+        return bool((self.lane_bits > 8).any())
+
+    @property
+    def lane_masks(self) -> np.ndarray:
+        """(n_mult,) uint32 per-lane 2W-bit product masks (0 marks a
+        narrow lane — the banked engines' selector-and-truncation,
+        matching the composed netlist's output width)."""
+        from .registry import lane_mask_np
+        return lane_mask_np(self.lane_bits)
+
     def spec(self, i: int, mode: str = "lut",
              variant: str = "ref") -> BackendSpec:
-        """The serializable spec lane ``i`` of a banked sweep stands for."""
+        """The serializable spec lane ``i`` of a banked sweep stands
+        for (``bit_width``/``reduce_adder`` left to library inference,
+        matching the specs sequential sweeps build)."""
         return BackendSpec(mode=mode, multiplier=self.names[i],
                            block_m=self.block_m, variant=variant)
 
     @staticmethod
     def from_library(names, library=None, block_m: int = 512) -> "LutBank":
+        """Pack a (possibly mixed-width) candidate set: 8-bit entries
+        contribute their own LUT, composed wide entries their tile's.
+        Raises when wide lanes disagree on the reduction tree (one
+        bank compiles ONE static tree) — split such sweeps into one
+        bank per reduction."""
+        from repro.core.families import parse_reduce
         if library is None:
             from repro.core.library import get_default_library
             library = get_default_library()
+        from repro.approx.quant import TRACED_WIDTHS
         names = tuple(names)
-        luts = np.stack([np.asarray(library.lut(n), dtype=np.int32)
-                         for n in names])
-        return LutBank(names=names, luts=luts, block_m=block_m)
+        luts, widths, reduces = [], [], {}
+        for n in names:
+            entry = library.entry(n)
+            comp = library.composition_of(n)
+            if entry.width not in TRACED_WIDTHS:
+                raise ValueError(
+                    f"bank lane {n!r} is {entry.width}-bit; banked "
+                    f"sweeps support widths {TRACED_WIDTHS} (per-lane "
+                    "width is selected at runtime from this set)")
+            luts.append(np.asarray(library.tile_lut(n), dtype=np.int32))
+            widths.append(int(entry.width))
+            if comp is not None:
+                reduces[n] = comp["reduce"]
+        reduce = "exact"
+        if reduces:
+            parsed = {parse_reduce(r) for r in reduces.values()}
+            if len(parsed) > 1:
+                raise ValueError(
+                    "mixed reduction trees in one bank: "
+                    f"{sorted(set(reduces.values()))} — a banked sweep "
+                    "compiles one static shift/add tree; sweep each "
+                    "reduction family in its own bank")
+            reduce = next(iter(reduces.values()))
+        return LutBank(names=names, luts=np.stack(luts), block_m=block_m,
+                       bit_widths=tuple(widths), reduce=reduce)
 
 
 # ----------------------------------------------------------------------

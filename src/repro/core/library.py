@@ -28,12 +28,42 @@ import numpy as np
 
 from .cgp import CgpParams, ParetoArchive, evolve, pad_nodes
 from .cost import CostReport, evaluate_cost
-from .families import (bam_multiplier, loa_adder, truncated_adder,
+from .families import (TILE_BITS, bam_multiplier, composed_multiplier,
+                       loa_adder, reduce_tag, truncated_adder,
                        truncated_multiplier)
-from .luts import lut_from_netlist, exact_mul_lut
+from .luts import MAX_LUT_WIDTH, LutWidthError, lut_from_netlist, \
+    exact_mul_lut
 from .metrics import ErrorReport, METRIC_NAMES, evaluate_errors
 from .netlist import Netlist
 from .seeds import array_multiplier, ripple_carry_adder
+
+
+class UnknownCircuitError(KeyError):
+    """A library lookup named a circuit that is not in the library."""
+
+    def __init__(self, name: str, library: "ApproxLibrary"):
+        self.circuit = name
+        hint = ""
+        close = sorted(n for n in library.entries
+                       if n.startswith(name[:6]))[:6]
+        if close:
+            hint = f"; closest entries: {close}"
+        super().__init__(
+            f"unknown circuit {name!r} ({len(library.entries)} entries "
+            f"in library){hint}")
+
+
+class WidthMismatchError(ValueError):
+    """A spec's ``bit_width`` disagrees with the library entry's width."""
+
+    def __init__(self, name: str, expected: int, actual: int):
+        self.circuit = name
+        self.expected = expected
+        self.actual = actual
+        super().__init__(
+            f"circuit {name!r} is {actual}-bit but the spec declares "
+            f"bit_width={expected}; drop bit_width to infer it from "
+            "the library, or name a circuit of the declared width")
 
 _DATA_DIR = os.path.join(os.path.dirname(__file__), "library_data")
 DEFAULT_LIBRARY_PATH = os.path.join(_DATA_DIR, "default_library.json")
@@ -47,14 +77,18 @@ class CircuitEntry:
     name: str
     kind: str          # 'adder' | 'multiplier'
     width: int
-    source: str        # 'exact' | 'evolved' | 'truncation' | 'bam' | 'loa'
+    source: str        # 'exact'|'evolved'|'truncation'|'bam'|'loa'|'composed'
     errors: ErrorReport
     cost: CostReport
     rel_power: float   # power / power(exact same kind+width)
     netlist: Netlist
+    # composed wide multipliers carry the recipe the executable engine
+    # needs: {"tile": <8-bit multiplier entry name>, "reduce": token}
+    # (DESIGN.md §2.6).  None for directly-materializable entries.
+    composition: Optional[dict] = None
 
     def as_dict(self) -> dict:
-        return {
+        d = {
             "name": self.name,
             "kind": self.kind,
             "width": self.width,
@@ -64,6 +98,9 @@ class CircuitEntry:
             "rel_power": self.rel_power,
             "netlist": self.netlist.to_dict(),
         }
+        if self.composition is not None:
+            d["composition"] = dict(self.composition)
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "CircuitEntry":
@@ -76,6 +113,7 @@ class CircuitEntry:
             cost=CostReport(**d["cost"]),
             rel_power=float(d["rel_power"]),
             netlist=Netlist.from_dict(d["netlist"]),
+            composition=d.get("composition"),
         )
 
 
@@ -106,6 +144,20 @@ class ApproxLibrary:
         return entry
 
     # -- queries ---------------------------------------------------------
+    def entry(self, name: str,
+              bit_width: Optional[int] = None) -> CircuitEntry:
+        """Validated lookup: raises ``UnknownCircuitError`` for missing
+        names (instead of a bare ``KeyError``) and
+        ``WidthMismatchError`` when ``bit_width`` is given and
+        disagrees with the entry — the spec-side width contract of the
+        width-generic datapaths (DESIGN.md §2.6)."""
+        e = self.entries.get(name)
+        if e is None:
+            raise UnknownCircuitError(name, self)
+        if bit_width is not None and int(bit_width) != e.width:
+            raise WidthMismatchError(name, int(bit_width), e.width)
+        return e
+
     def select(self, kind: Optional[str] = None, width: Optional[int] = None,
                source: Optional[str] = None) -> list[CircuitEntry]:
         out = []
@@ -183,17 +235,121 @@ class ApproxLibrary:
 
     # -- LUTs ------------------------------------------------------------
     def lut(self, name: str) -> np.ndarray:
-        """(2^w, 2^w) int32 product LUT for a multiplier entry (w <= 12)."""
+        """(2^w, 2^w) int32 product LUT for a multiplier entry
+        (w <= ``MAX_LUT_WIDTH``).  Wide netlists raise
+        ``LutWidthError`` pointing at the composed datapath, and
+        composed entries (any width) raise ``ValueError`` — they
+        execute through ``tile_lut`` / ``composition_of`` (tiled 8x8
+        partial products), never a full product table."""
         if name in self._lut_cache:
             return self._lut_cache[name]
-        e = self.entries[name]
+        e = self.entry(name)
         if e.kind != "multiplier":
             raise ValueError("LUT emulation is defined for multipliers")
-        if e.width > 12:
-            raise ValueError("LUT materialization capped at 12-bit operands")
+        if e.width > MAX_LUT_WIDTH:
+            raise LutWidthError(name, e.width)
+        if e.composition is not None:
+            # a 12-bit composed entry's full LUT would technically fit
+            # the cap, but materializing it means minutes of gate-level
+            # simulation over 2^24 pairs for a table the engine never
+            # reads — composed entries execute through their tile
+            raise ValueError(
+                f"{name!r} is a composed entry and executes through "
+                "its 256x256 tile LUT — use tile_lut()/"
+                "composition_of() instead of a full product LUT "
+                "(DESIGN.md §2.6)")
         lut = lut_from_netlist(e.netlist, e.width)
         self._lut_cache[name] = lut
         return lut
+
+    def composition_of(self, name: str) -> Optional[dict]:
+        """The composed-datapath recipe of ``name`` (DESIGN.md §2.6):
+        ``{"tile": <8-bit multiplier entry>, "reduce": token}`` for
+        composed entries, None for directly-materializable 8-bit
+        entries.  Wide entries WITHOUT a composition recipe are not
+        executable: above ``MAX_LUT_WIDTH`` that is the LUT-size cap
+        (``LutWidthError``); at 9..12 bits a full LUT *could*
+        materialize but the execution engine runs 256x256 tiles only,
+        so the error says that instead of blaming a cap that was not
+        hit."""
+        e = self.entry(name)
+        if e.composition is not None:
+            return dict(e.composition)
+        if e.kind == "multiplier" and e.width > TILE_BITS:
+            if e.width > MAX_LUT_WIDTH:
+                raise LutWidthError(name, e.width)
+            raise ValueError(
+                f"circuit {name!r} is a direct {e.width}-bit "
+                "multiplier: its full LUT fits the "
+                f"{MAX_LUT_WIDTH}-bit materialization cap, but the "
+                "execution engine runs 256x256 tile LUTs only "
+                "(8-bit entries directly, wider ones through a "
+                "composition recipe).  Register an executable "
+                f"composed entry via add_composed(tile, "
+                f"width={e.width}, reduce=...) — DESIGN.md §2.6.")
+        return None
+
+    def tile_lut(self, name: str) -> np.ndarray:
+        """The 256x256 tile LUT that executes entry ``name``: the
+        entry's own LUT for 8-bit multipliers, the composition tile's
+        LUT for composed wide entries."""
+        comp = self.composition_of(name)
+        return self.lut(comp["tile"] if comp else name)
+
+    # -- composed wide entries (DESIGN.md §2.6) --------------------------
+    def add_composed(self, tile: str, width: int, reduce: str = "exact",
+                     name: Optional[str] = None,
+                     samples: int = 1 << 14) -> CircuitEntry:
+        """Register a W-bit multiplier composed from 8x8 ``tile``
+        partial products reduced by ``reduce``-family adders.
+
+        The composed gate-level netlist is built (the bitsim ground
+        truth of the executable engine), characterized against the
+        exact same-width array multiplier (sampled — 2W input bits is
+        beyond exhaustive reach), costed with the 45 nm gate model, and
+        admitted with ``source="composed"`` plus the composition
+        recipe.  Idempotent per (tile, width, reduce): the derived name
+        is deterministic and an existing entry is returned as-is.
+        """
+        tile_entry = self.entry(tile, bit_width=TILE_BITS)
+        if tile_entry.kind != "multiplier":
+            raise ValueError(f"composition tile {tile!r} must be a "
+                             "multiplier entry")
+        name = name or f"mul{width}u_c_{tile}_{reduce_tag(reduce)}"
+        if name in self.entries:
+            from .families import parse_reduce
+            e = self.entries[name]
+            same = (e.width == width and e.composition is not None
+                    and e.composition.get("tile") == tile
+                    and parse_reduce(e.composition.get("reduce",
+                                                       "exact"))
+                    == parse_reduce(reduce))
+            if not same:
+                raise ValueError(
+                    f"entry {name!r} already exists with a different "
+                    f"recipe ({e.width}-bit, composition="
+                    f"{e.composition}) than requested ({width}-bit, "
+                    f"tile={tile!r}, reduce={reduce!r}) — explicit "
+                    "names must not collide across recipes")
+            return e
+        nl = composed_multiplier(tile_entry.netlist, width, reduce,
+                                 name=name)
+        exact_name = f"mul{width}u_exact"
+        if exact_name in self.entries:
+            exact = self.entries[exact_name].netlist
+        else:
+            exact = array_multiplier(width)
+        errors = evaluate_errors(nl, exact, samples=samples)
+        cost = evaluate_cost(nl)
+        ref = evaluate_cost(exact).power
+        entry = CircuitEntry(
+            name=name, kind="multiplier", width=width, source="composed",
+            errors=errors, cost=cost,
+            rel_power=(cost.power / ref if ref > 0 else 0.0),
+            netlist=nl,
+            composition={"tile": tile, "reduce": reduce})
+        self.add(entry)
+        return entry
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> None:

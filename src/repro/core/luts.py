@@ -22,8 +22,42 @@ import numpy as np
 
 from .netlist import Netlist
 
+#: Widest operand a full product LUT is ever materialized for.  A W-bit
+#: LUT holds 2^(2W) int32 entries — 64 MiB at W=12, 16 TiB at W=16 —
+#: so wider multipliers must execute through the composed datapath
+#: (tiled 8x8 LUT partial products, DESIGN.md §2.6) instead.
+MAX_LUT_WIDTH = 12
+
+
+class LutWidthError(ValueError):
+    """Raised when a full product LUT would exceed ``MAX_LUT_WIDTH``.
+
+    Wide multipliers are *executable* — just not as a monolithic table.
+    The actionable fix is the composed datapath: register a composed
+    entry (``ApproxLibrary.add_composed(tile, width, reduce)``) or name
+    one in a ``BackendSpec(multiplier=..., bit_width=W)``; its 8-bit
+    tile LUT then drives the tiled 8x8 partial-product engine
+    (``repro.kernels.composed_matmul``, DESIGN.md §2.6).
+    """
+
+    def __init__(self, name: str, width: int):
+        self.circuit = name
+        self.width = width
+        super().__init__(
+            f"cannot materialize a full {width}-bit product LUT for "
+            f"{name!r} (2^{2 * width} entries; cap is "
+            f"{MAX_LUT_WIDTH}-bit operands).  Wide multipliers run "
+            "through the composed datapath instead: register a "
+            "composed entry via ApproxLibrary.add_composed(tile, "
+            f"width={width}, reduce=...) (tiled 8x8 LUT partial "
+            "products reduced by a shift/add tree, DESIGN.md §2.6) "
+            "and reference it from a BackendSpec, which packs only "
+            "the 256x256 tile LUT.")
+
 
 def exact_mul_lut(width: int = 8) -> np.ndarray:
+    if width > MAX_LUT_WIDTH:
+        raise LutWidthError(f"mul{width}u_exact", width)
     n = 1 << width
     a = np.arange(n, dtype=np.int64)
     return (a[:, None] * a[None, :]).astype(np.int32)
@@ -32,6 +66,8 @@ def exact_mul_lut(width: int = 8) -> np.ndarray:
 def lut_from_netlist(nl: Netlist, width: int = 8) -> np.ndarray:
     """Exhaustive (2^w x 2^w) LUT for a 2w-input multiplier-like netlist.
     Row index = operand A (low input bits), column = operand B."""
+    if width > MAX_LUT_WIDTH:
+        raise LutWidthError(nl.name or "<netlist>", width)
     if nl.n_i != 2 * width:
         raise ValueError("netlist is not a two-operand circuit of this width")
     n = 1 << width

@@ -11,28 +11,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.approx.registry import (Datapath, pack_lowrank, pack_lut,
-                                   register_datapath)
+from repro.approx.registry import (MAX_COMPOSED_K, Datapath, pack_lowrank,
+                                   pack_lut, register_datapath)
 
-from .ops import approx_matmul_lut, lowrank_matmul
+from .ops import approx_matmul_lut, composed_matmul_lut, lowrank_matmul
 
 
 @register_datapath("lut_pallas")
 class LutPallasDatapath(Datapath):
-    """Bit-true LUT emulation through the Pallas texture-gather kernel.
+    """Bit-true LUT emulation through the Pallas texture-gather kernels
+    — width-generic (DESIGN.md §2.6): 8-bit specs run the historical
+    single-LUT kernel; composed wide specs run the tiled 8x8
+    partial-product kernel on the tile LUT.
 
-    Bankable: under the batched engine's vmap, ``approx_matmul_lut``'s
-    custom batching rule reroutes the whole LUT bank to the banked
-    kernel (``lut_bank.py``, grid over the multiplier axis) instead of
-    batching the single-LUT kernel rank-by-rank."""
+    Bankable: under the batched engine's vmap, the ops' custom batching
+    rules reroute the whole LUT bank to the banked kernels
+    (``lut_bank.py`` / ``composed_matmul.py``, grid over the
+    multiplier axis) instead of batching the single-LUT kernel
+    lane by lane."""
 
-    spec_fields = ("multiplier",)   # kernel does its own blocking
+    # kernel does its own blocking, so block_m is not a spec field
+    spec_fields = ("multiplier", "bit_width", "reduce_adder")
     bankable = True
 
     def pack(self, spec, library) -> dict:
         return pack_lut(spec, library)
 
     def forward_q(self, qa, qw, consts):
+        if consts.get("composed"):
+            if qa.shape[-1] > MAX_COMPOSED_K:
+                raise ValueError(
+                    f"K={qa.shape[-1]} exceeds int32-safe composed "
+                    f"limb accumulation bound {MAX_COMPOSED_K}")
+            return composed_matmul_lut(qa, qw, jnp.asarray(consts["lut"]),
+                                       consts["mask"],
+                                       reduce=consts["reduce"])
         return approx_matmul_lut(qa, qw, jnp.asarray(consts["lut"]))
 
 

@@ -6,12 +6,16 @@ the ``ref.py`` oracles.  On a TPU backend the same calls lower to Mosaic.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.custom_batching
 import jax.numpy as jnp
 import numpy as np
 
 from .approx_matmul import approx_matmul_lut_pallas
+from .composed_matmul import (composed_matmul_bank_pallas,
+                              composed_matmul_pallas)
 from .lut_bank import approx_matmul_lut_bank_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
 from .bitsim import bitsim_pallas
@@ -59,6 +63,56 @@ def approx_matmul_lut_bank(qa: jax.Array, qw: jax.Array, luts: jax.Array
     -> (n,M,N) i32, bit-identical per bank to ``approx_matmul_lut``."""
     return approx_matmul_lut_bank_pallas(qa, qw, luts,
                                          interpret=_interpret())
+
+
+@functools.lru_cache(maxsize=None)
+def _composed_op(reduce: tuple):
+    """The composed (wide-width) LUT matmul op for one static reduce
+    tree, with the same bank-collapsing batching rule as
+    ``approx_matmul_lut``: vmap over (lut, wide) routes the whole
+    mixed-width bank to the banked composed kernel — one launch, grid
+    over the multiplier axis (DESIGN.md §2.6) — instead of batching
+    the single-tile kernel lane by lane."""
+
+    @jax.custom_batching.custom_vmap
+    def op(qa, qw, lut, mask):
+        return composed_matmul_pallas(qa, qw, lut, mask, reduce=reduce,
+                                      interpret=_interpret())
+
+    @op.def_vmap
+    def _op_vmap(axis_size, in_batched, qa, qw, lut, mask):
+        qa_b, qw_b, lut_b, mask_b = in_batched
+        if qw_b:
+            # batched weights (experts) are not a LUT bank: native rule
+            out = jax.vmap(
+                lambda a, w, l, mk: composed_matmul_pallas(
+                    a, w, l, mk, reduce=reduce, interpret=_interpret()),
+                in_axes=(0 if qa_b else None, 0, 0 if lut_b else None,
+                         0 if mask_b else None),
+            )(qa, qw, lut, mask)
+            return out, True
+        luts = (lut if lut_b
+                else jnp.broadcast_to(lut, (axis_size,) + lut.shape))
+        masks = (mask if mask_b
+                 else jnp.broadcast_to(jnp.asarray(mask), (axis_size,)))
+        out = composed_matmul_bank_pallas(qa, qw, luts, masks,
+                                          reduce=reduce,
+                                          interpret=_interpret())
+        return out, True
+
+    return op
+
+
+def composed_matmul_lut(qa: jax.Array, qw: jax.Array, lut: jax.Array,
+                        mask, reduce: tuple = ("exact", 0)) -> jax.Array:
+    """Composed wide approximate matmul on W-bit codes through the
+    256x256 tile LUT.  (M,K)x(K,N)->(M,N) f32 (exact int32 limb
+    accumulation recombined as ``lo + 65536*hi``).  ``mask`` is the
+    per-call (or per vmapped lane) 2W-bit product mask — the composed
+    product is truncated to the gate netlist's output width, and
+    ``mask == 0`` selects the plain 8-bit tile sum instead."""
+    return _composed_op(tuple(reduce))(
+        qa, qw, lut, jnp.asarray(mask, jnp.uint32))
 
 
 def lowrank_matmul(qa: jax.Array, qw: jax.Array, u: jax.Array, v: jax.Array

@@ -32,6 +32,17 @@ def approx_matmul_lut_bank_ref(qa: jax.Array, qw: jax.Array,
                     )(qa, luts)
 
 
+def composed_matmul_ref(qa: jax.Array, qw: jax.Array, lut: jax.Array,
+                        mask, reduce: tuple = ("exact", 0)) -> jax.Array:
+    """Composed wide (12/16-bit) oracle: tiled 8x8 digit products
+    through the 256x256 tile LUT, shift/add-tree reduced and truncated
+    to the 2W-bit ``mask`` (0 = narrow lane), exact int32 limb
+    accumulation recombined as f32 (DESIGN.md §2.6).  Shared with the
+    ref datapath — see ``composed_matmul.py`` for the kernels."""
+    from .composed_matmul import composed_matmul_ref as _impl
+    return _impl(qa, qw, lut, mask, reduce)
+
+
 def lowrank_matmul_ref(qa: jax.Array, qw: jax.Array, u: jax.Array,
                        v: jax.Array) -> jax.Array:
     """Σ_r tableU_r(qa) @ tableV_r(qw), f32. u,v: (R,256) f32."""

@@ -258,6 +258,17 @@ def bank_sharding(n_banks: int, mesh: Optional[Mesh] = None,
     return NamedSharding(mesh, bank_pspec(n_banks, mesh, axis))
 
 
+def lane_sharding(bank_sh: NamedSharding) -> NamedSharding:
+    """Sharding for a wide bank's per-lane aux arrays — the ``(n,)``
+    ``bit_widths``/``wide`` selectors a mixed-width bank carries next
+    to its ``(n, 256, 256)`` tile LUTs (DESIGN.md §2.6): same mesh,
+    leading (lane) axis only.  ``bank_eval`` derives this itself from
+    the bank sharding you pass; this helper is for callers placing the
+    aux arrays manually."""
+    lead = bank_sh.spec[0] if len(bank_sh.spec) else None
+    return NamedSharding(bank_sh.mesh, P(lead))
+
+
 def policy_sharding(n_policies: int, mesh: Optional[Mesh] = None,
                     axis: str = "sweep") -> NamedSharding:
     """Sharding for the heterogeneous engine's *policy* axis — the

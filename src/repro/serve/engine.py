@@ -34,6 +34,10 @@ class ServeConfig:
     # the ``to_json_dict()`` dict or the ``to_json()`` string, either
     # uniform or heterogeneous (one override per layer, e.g. an
     # ``explore_heterogeneous`` selection); None = the engine default.
+    # Width-generic (DESIGN.md §2.6): specs may name composed 12/16-bit
+    # entries and carry ``bit_width``/``reduce_adder`` — the JSON shape
+    # is unchanged and width claims are validated at materialization
+    # (typed WidthMismatchError/LutWidthError on disagreement).
     policy: Optional[Union[dict, str]] = None
 
 

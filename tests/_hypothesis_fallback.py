@@ -8,7 +8,8 @@ both endpoints plus seeded-random interior draws — strictly weaker than
 real hypothesis, but the invariants still execute.
 
 Covers exactly the API surface this repo uses: ``given``, ``settings``,
-``strategies.integers``, ``strategies.floats``, ``strategies.booleans``.
+``strategies.integers``, ``strategies.floats``, ``strategies.booleans``,
+``strategies.sampled_from``.
 """
 from __future__ import annotations
 
@@ -52,6 +53,20 @@ def booleans() -> _BoolStrategy:
     return _BoolStrategy()
 
 
+class _SampledStrategy:
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def draw(self, rng: random.Random, i: int):
+        if i < len(self.elements):
+            return self.elements[i]        # cover every element first
+        return self.elements[rng.randrange(len(self.elements))]
+
+
+def sampled_from(elements) -> _SampledStrategy:
+    return _SampledStrategy(elements)
+
+
 def given(*strats: _Strategy):
     def deco(fn):
         # NOTE: deliberately not functools.wraps — pytest must see a
@@ -85,6 +100,7 @@ def build_module() -> ModuleType:
     strategies.integers = integers
     strategies.floats = floats
     strategies.booleans = booleans
+    strategies.sampled_from = sampled_from
     mod.strategies = strategies
     mod.HealthCheck = SimpleNamespace()   # occasionally referenced
     mod.__fallback__ = True

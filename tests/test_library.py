@@ -2,16 +2,46 @@
 import numpy as np
 import pytest
 
-from repro.core.library import (ApproxLibrary, build_default_library,
+from repro.core.library import (ApproxLibrary, UnknownCircuitError,
+                                WidthMismatchError, build_default_library,
                                 CircuitEntry)
-from repro.core.luts import (decompose_lut, exact_mul_lut, lut_from_netlist,
-                             rank_for_tolerance, rank_profile)
+from repro.core.luts import (LutWidthError, decompose_lut, exact_mul_lut,
+                             lut_from_netlist, rank_for_tolerance,
+                             rank_profile)
 from repro.core import families, seeds
 
 
 @pytest.fixture(scope="module")
 def tiny_lib():
     return build_default_library("tiny")
+
+
+def test_entry_lookup_is_validated(tiny_lib):
+    e = tiny_lib.entry("mul8u_exact", bit_width=8)
+    assert e.width == 8
+    with pytest.raises(UnknownCircuitError):
+        tiny_lib.entry("does_not_exist")
+    with pytest.raises(WidthMismatchError):
+        tiny_lib.entry("mul8u_exact", bit_width=12)
+    # UnknownCircuitError stays a KeyError for legacy except-clauses
+    assert issubclass(UnknownCircuitError, KeyError)
+    assert issubclass(WidthMismatchError, ValueError)
+    assert issubclass(LutWidthError, ValueError)
+
+
+def test_composed_entries_enter_counts_table(tiny_lib):
+    tiny_lib.add_composed("mul8u_trunc4", 16, "exact", samples=64)
+    table = tiny_lib.counts_table()
+    kinds = {(r["circuit"], r["bit_width"]) for r in table}
+    assert ("multiplier", 16) in kinds
+    sel = tiny_lib.select("multiplier", 16, source="composed")
+    assert sel and all(e.composition is not None for e in sel)
+
+
+def test_exact_mul_lut_width_cap():
+    assert exact_mul_lut(8).shape == (256, 256)
+    with pytest.raises(LutWidthError, match="composed"):
+        exact_mul_lut(16)
 
 
 def test_library_counts(tiny_lib):

@@ -1,0 +1,114 @@
+"""Width-aware quantization regression tests (DESIGN.md §2.6).
+
+``calibrate``/``quantize``/``dequantize`` are parametric in ``bits``:
+round-trip error must shrink with width (bounded by scale/2 per
+element), zero points must stay inside the code range, and the 8-bit
+path must remain bit-identical to the historical uint8 arithmetic.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.quant import (QuantParams, calibrate, dequantize,
+                                fake_quant, quantize)
+
+WIDTHS = (8, 12, 16)
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_round_trip_error_bounded_by_half_scale(bits):
+    x = jnp.asarray(RNG.normal(size=(64, 32)).astype(np.float32) * 3.0)
+    qp = calibrate(x, bits=bits)
+    err = np.abs(np.asarray(dequantize(quantize(x, qp), qp) - x))
+    assert err.max() <= float(qp.scale) * 0.5 + 1e-6
+    # the range covers the tensor, so scale ~ span / (2^bits - 1)
+    span = float(jnp.max(x) - jnp.min(x))
+    assert float(qp.scale) <= span / (2 ** bits - 1) * 1.001
+
+
+def test_wider_widths_strictly_reduce_round_trip_error():
+    x = jnp.asarray(RNG.normal(size=(128, 16)).astype(np.float32))
+    maes = [float(np.abs(np.asarray(fake_quant(x, bits=b) - x)).mean())
+            for b in WIDTHS]
+    assert maes[1] < maes[0] / 4
+    assert maes[2] < maes[1] / 4
+
+
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_zero_point_and_codes_stay_in_range(bits):
+    qmax = 2 ** bits - 1
+    for scale in (0.01, 1.0, 1000.0):
+        for shift in (-5.0, 0.0, 7.0):
+            x = jnp.asarray(
+                RNG.normal(size=(33, 7)).astype(np.float32) * scale
+                + shift)
+            qp = calibrate(x, bits=bits)
+            zp = int(qp.zero_point)
+            assert 0 <= zp <= qmax
+            q = np.asarray(quantize(x, qp))
+            assert q.min() >= 0 and q.max() <= qmax
+
+
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_all_zeros_edge_case(bits):
+    x = jnp.zeros((8, 8), jnp.float32)
+    qp = calibrate(x, bits=bits)
+    assert float(qp.scale) > 0                      # eps floor, no NaN
+    assert int(qp.zero_point) == 0
+    assert np.asarray(dequantize(quantize(x, qp), qp)).max() == 0.0
+
+
+@pytest.mark.parametrize("bits", WIDTHS)
+@pytest.mark.parametrize("c", [4.25, -3.0])
+def test_constant_tensor_edge_case(bits, c):
+    x = jnp.full((5, 9), c, jnp.float32)
+    qp = calibrate(x, bits=bits)
+    q = np.asarray(quantize(x, qp))
+    qmax = 2 ** bits - 1
+    assert q.min() >= 0 and q.max() <= qmax
+    # constant tensors round-trip exactly: the grid [min(x,0), max(x,0)]
+    # contains both 0 and c on code-point boundaries
+    back = np.asarray(dequantize(quantize(x, qp), qp))
+    np.testing.assert_allclose(back, c, rtol=1e-5)
+
+
+def test_bits8_bit_identical_to_historical_uint8_path():
+    """The refactored width-generic calibrate at bits=8 must reproduce
+    the pre-refactor arithmetic EXACTLY (same f32 ops, qmax == 255.0
+    exactly)."""
+    x = jnp.asarray(RNG.normal(size=(40, 13)).astype(np.float32) * 2.5
+                    + 0.7)
+    qp = calibrate(x, bits=8)
+    assert float(qp.qmax) == 255.0
+    # historical formulas, verbatim
+    lo = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    hi = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-8)
+    zp = jnp.clip(jnp.round(-lo / scale), 0, 255).astype(jnp.int32)
+    assert float(qp.scale) == float(scale)
+    assert int(qp.zero_point) == int(zp)
+    old_q = jnp.clip(jnp.round(x / scale) + zp, 0, 255).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(quantize(x, qp)),
+                                  np.asarray(old_q))
+
+
+def test_traced_bits_matches_static_bits():
+    """Mixed-width banks pass ``bits`` as a traced per-lane scalar;
+    the result must equal static calibration at the same width."""
+    import jax
+    x = jnp.asarray(RNG.normal(size=(16, 16)).astype(np.float32))
+
+    def quant_codes(bits):
+        qp = calibrate(x, bits=bits)
+        return quantize(x, qp)
+
+    for bits in WIDTHS:
+        static = np.asarray(quant_codes(bits))
+        traced = np.asarray(jax.jit(quant_codes)(jnp.int32(bits)))
+        np.testing.assert_array_equal(static, traced)
+
+
+def test_quantparams_default_is_8bit():
+    qp = QuantParams(scale=jnp.float32(1.0), zero_point=jnp.int32(0))
+    assert float(qp.qmax) == 255.0
