@@ -1,6 +1,6 @@
-"""Regenerate the §Dry-run, §Roofline, §Heterogeneous and §Wide tables
-of EXPERIMENTS.md from the result JSONs (idempotent; §Perf and prose
-are maintained by hand between the markers)."""
+"""Regenerate the §Dry-run, §Roofline, §Heterogeneous, §Wide and
+§Objectives tables of EXPERIMENTS.md from the result JSONs (idempotent;
+§Perf and prose are maintained by hand between the markers)."""
 from __future__ import annotations
 
 import glob
@@ -204,6 +204,60 @@ def wide_table() -> str:
     return "\n".join(rows)
 
 
+OBJECTIVES_PATH = os.path.join(os.path.dirname(__file__), "results",
+                               "BENCH_objectives.json")
+
+
+def objectives_table() -> str:
+    """Multi-objective fronts from BENCH_objectives.json (written by
+    `python -m benchmarks.objectives_pareto`)."""
+    if not os.path.exists(OBJECTIVES_PATH):
+        return "(run `python -m benchmarks.objectives_pareto` first)"
+    with open(OBJECTIVES_PATH) as f:
+        r = json.load(f)
+    rn, dec = r["resnet"], r["decoder"]
+    rows = [f"ResNet-8 sweep over {len(rn['candidates'])} candidates, "
+            f"objectives {tuple(rn['objectives'])}"
+            f"{' (quick)' if r.get('quick') else ''}; 2-d front "
+            f"bit-identical to the pre-§2.7 sweep: "
+            f"{rn['bit_identical_2d']}.", "",
+            "| front | multiplier | acc% | power% | delay% |",
+            "|---|---|---|---|---|"]
+    for kind, key in (("acc×power", "pareto_2d"),
+                      ("acc×power×delay", "pareto_3d")):
+        for p in rn.get(key, []):
+            rows.append(
+                f"| {kind} | {p['multiplier']} "
+                f"| {100 * p['accuracy']:.2f} "
+                f"| {100 * p['power']:.1f} "
+                f"| {100 * p['delay']:.1f} |"
+                if "delay" in p else
+                f"| {kind} | {p['multiplier']} "
+                f"| {100 * p['accuracy']:.2f} "
+                f"| {100 * p['power']:.1f} | - |")
+    rows += ["", f"Decoder scenario: `{dec['workload']}` "
+             f"({dec['arch']}, reduced) over {len(dec['candidates'])} "
+             f"candidates, objectives {tuple(dec['objectives'])} — "
+             f"banked sweep bit-identical to sequential: "
+             f"{dec['bit_identical']} ({dec['speedup']}x).", "",
+             "| front | multiplier | logit MAE | top-1 agree | power% "
+             "| delay% |", "|---|---|---|---|---|---|"]
+    for p in dec.get("pareto_3d", []):
+        rows.append(f"| mae×power×delay | {p['multiplier']} "
+                    f"| {p['logit_mae']:.6f} "
+                    f"| {p['top1_agreement']:.2f} "
+                    f"| {100 * p['power']:.1f} "
+                    f"| {100 * p['delay']:.1f} |")
+    if dec.get("selected"):
+        s = dec["selected"]
+        rows += ["", f"Declarative pick (`select(..., "
+                 f"constraints={{'logit_mae': MaxDrop(0.05)}}, "
+                 f"minimize='power')`): {s['multiplier']} at "
+                 f"{100 * s['power']:.1f}% power, logit MAE "
+                 f"{s['logit_mae']:.6f}."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -223,6 +277,7 @@ def main() -> None:
     text = replace_section(text, "PERF", perf_table())
     text = replace_section(text, "HETERO", hetero_table())
     text = replace_section(text, "WIDE", wide_table())
+    text = replace_section(text, "OBJECTIVES", objectives_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

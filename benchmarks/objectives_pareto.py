@@ -1,0 +1,202 @@
+"""Objective-first DSE benchmark (DESIGN.md §2.7).
+
+The paper's library "forms Pareto fronts with respect to several error
+metrics, power consumption and other circuit parameters"; this
+benchmark exercises the Workload/Objective layer that makes those axes
+pluggable at NETWORK level and writes
+``benchmarks/results/BENCH_objectives.json`` recording:
+
+  * the trained ResNet-8 / synthetic CIFAR-10 sweep (one banked
+    program) Pareto'd over ``("accuracy", "power")`` AND over
+    ``("accuracy", "power", "delay")`` — the extra circuit axis the
+    N-dimensional front opens,
+  * the 2-D-FRONT BIT-IDENTITY GATE: the generic N-d ``pareto_points``
+    restricted to the legacy ``(accuracy, power)`` pair must reproduce
+    the pre-refactor sweep algorithm exactly — membership, order and
+    values (the run FAILS otherwise),
+  * a decoder-LM scenario: ``lm_fidelity`` over a registered config
+    (reduced ``qwen1.5-0.5b``) swept through the SAME banked engine
+    and Pareto'd over ``("logit_mae", "power", "delay")`` — a 3-axis
+    front over a workload that measures no classification accuracy at
+    all, with a sequential-vs-banked bit-identity gate, and
+  * a declarative ``select(...)`` pick on each scenario.
+
+``--quick`` (CI mode) shrinks the ResNet eval set; the decoder config
+is smoke-sized either way.  All checks are deterministic (seeded
+synthetic data + committed checkpoint).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.approx.dse import DesignPoint, explore
+from repro.approx.objectives import MaxDrop, select, value_of
+from repro.approx.workload import lm_fidelity
+from repro.core.library import get_default_library
+
+from .common import emit
+from .resilience_common import case_study_names, make_eval_fn, trained_resnet
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_objectives.json")
+
+DECODER_ARCH = "qwen1.5-0.5b"
+
+
+def _legacy_pareto_2d(points):
+    """The pre-§2.7 (accuracy max, power min) sweep, verbatim — the
+    reference side of the bit-identity gate."""
+    pts = sorted(points, key=lambda p: (p.network_rel_power, -p.accuracy))
+    front, best_acc, i = [], float("-inf"), 0
+    while i < len(pts):
+        j = i
+        power = pts[i].network_rel_power
+        while j < len(pts) and pts[j].network_rel_power == power:
+            j += 1
+        acc_max = pts[i].accuracy
+        if acc_max > best_acc:
+            front.extend(p for p in pts[i:j] if p.accuracy == acc_max)
+            best_acc = acc_max
+        i = j
+    return front
+
+
+def _point_dict(p: DesignPoint, axes) -> dict:
+    d = {"multiplier": p.multiplier}
+    for a in axes:
+        d[a] = round(value_of(p, a), 6)
+    return d
+
+
+def run(n_mult: int = 8, quick: bool = False,
+        quality_bound: float = 0.02) -> dict:
+    lib = get_default_library()
+
+    # -- ResNet scenario: accuracy x power x delay ---------------------
+    cfg, params = trained_resnet(8)
+    eval_n = 64 if quick else 256
+    wl = make_eval_fn(cfg, params, eval_n=eval_n, batch=64)
+    names = case_study_names(lib, n_mult)
+    # aggressive truncations keep the accuracy axis from saturating on
+    # the synthetic eval set, so the fronts stay non-degenerate
+    for extra in ("mul8u_trunc5", "mul8u_trunc4"):
+        if extra in lib.entries and extra not in names:
+            names.append(extra)
+
+    t0 = time.perf_counter()
+    result = explore(workload=wl, library=lib, multipliers=names,
+                     mode="lut", per_layer=False, batch=True,
+                     objectives=("accuracy", "power", "delay"))
+    sweep_s = time.perf_counter() - t0
+
+    front_2d = result.pareto(objectives=("accuracy", "power"))
+    legacy_2d = _legacy_pareto_2d(result.all_layers)
+    identical_2d = [id(p) for p in front_2d] == [id(p) for p in legacy_2d]
+    front_3d = result.pareto()
+    emit("objectives/resnet_sweep", sweep_s * 1e6,
+         f"n={len(names)};front2d={len(front_2d)};"
+         f"front3d={len(front_3d)};bit_identical={identical_2d}")
+
+    pick = select(result, constraints={"accuracy": MaxDrop(quality_bound)},
+                  minimize="power", axis="all_layers")
+
+    # -- decoder-LM scenario: logit_mae x power x delay ----------------
+    lm_wl = lm_fidelity(DECODER_ARCH, batch=2, seq_len=16, n_batches=2)
+    lm_names = names[:min(len(names), 6)]
+    t0 = time.perf_counter()
+    lm_result = explore(workload=lm_wl, library=lib,
+                        multipliers=lm_names, mode="lut",
+                        per_layer=False, batch=True,
+                        objectives=("logit_mae", "power", "delay"))
+    lm_bat_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lm_seq = explore(workload=lm_wl, library=lib, multipliers=lm_names,
+                     mode="lut", per_layer=False, batch=False,
+                     objectives=("logit_mae", "power", "delay"))
+    lm_seq_s = time.perf_counter() - t0
+    lm_identical = [p.metrics for p in lm_result.all_layers] == \
+                   [p.metrics for p in lm_seq.all_layers]
+    lm_front = lm_result.pareto()
+    lm_speedup = lm_seq_s / lm_bat_s if lm_bat_s > 0 else float("inf")
+    emit("objectives/lm_fidelity_sweep", lm_bat_s * 1e6,
+         f"n={len(lm_names)};front3d={len(lm_front)};"
+         f"speedup={lm_speedup:.2f};bit_identical={lm_identical}")
+
+    lm_pick = select(lm_result,
+                     constraints={"logit_mae": MaxDrop(0.05)},
+                     minimize="power", axis="all_layers")
+
+    axes_rn = ("accuracy", "power", "delay")
+    axes_lm = ("logit_mae", "top1_agreement", "power", "delay")
+    record = {
+        "benchmark": "objectives_pareto",
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "quality_bound": quality_bound,
+        "resnet": {
+            "workload": wl.name,
+            "objectives": list(result.objectives),
+            "baseline_metrics": result.baseline_metrics,
+            "candidates": names,
+            "sweep": [_point_dict(p, axes_rn)
+                      for p in result.all_layers],
+            "pareto_2d": [_point_dict(p, ("accuracy", "power"))
+                          for p in front_2d],
+            "pareto_3d": [_point_dict(p, axes_rn) for p in front_3d],
+            "bit_identical_2d": identical_2d,
+            "selected": _point_dict(pick, axes_rn) if pick else None,
+            "sweep_s": round(sweep_s, 4),
+        },
+        "decoder": {
+            "workload": lm_wl.name,
+            "arch": DECODER_ARCH,
+            "objectives": list(lm_result.objectives),
+            "baseline_metrics": lm_result.baseline_metrics,
+            "candidates": lm_names,
+            "sweep": [_point_dict(p, axes_lm)
+                      for p in lm_result.all_layers],
+            "pareto_3d": [_point_dict(p, axes_lm) for p in lm_front],
+            "bit_identical": lm_identical,
+            "selected": (_point_dict(lm_pick, axes_lm)
+                         if lm_pick else None),
+            "batched_s": round(lm_bat_s, 4),
+            "sequential_s": round(lm_seq_s, 4),
+            "speedup": round(lm_speedup, 2),
+        },
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("objectives/bench_record", 0.0, BENCH_PATH)
+
+    # record is written first so CI failures still upload the artifact
+    if not identical_2d:
+        raise SystemExit(
+            "generic N-d pareto_points diverged from the pre-refactor "
+            f"(accuracy, power) sweep (see {BENCH_PATH})")
+    if not lm_identical:
+        raise SystemExit(
+            "banked LM fidelity sweep diverged from sequential "
+            f"evaluation (see {BENCH_PATH})")
+    if not lm_front:
+        raise SystemExit(
+            f"empty 3-axis decoder fidelity front (see {BENCH_PATH})")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-mult", type=int, default=8,
+                    help="case-study candidate count")
+    ap.add_argument("--quick", action="store_true",
+                    help="small ResNet eval set (CI); restores the "
+                         "committed trained checkpoint either way")
+    ap.add_argument("--quality-bound", type=float, default=0.02)
+    args = ap.parse_args()
+    run(n_mult=args.n_mult, quick=args.quick,
+        quality_bound=args.quality_bound)

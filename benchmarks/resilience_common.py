@@ -1,18 +1,17 @@
 """Shared trained-model fixture for the resilience benchmarks: trains
 ResNet-8 on synthetic CIFAR once and caches the checkpoint.
 
-``make_eval_fn`` returns a ``BankableEval`` — the sequential closure
-plus its traceable core — so the same object drives both the
-sequential and the batched (``batch=True``) resilience engines."""
+``make_eval_fn`` returns the shipped ``classification`` Workload
+(DESIGN.md §2.7) — callable like the historical scalar eval, with the
+traceable core the batched (``batch=True``) resilience engines need."""
 from __future__ import annotations
 
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.approx.resilience import BankableEval
+from repro.approx.workload import Workload, classification
 from repro.data.synthetic import CifarBatches
 from repro.models import resnet
 from repro.train.checkpoint import CheckpointManager
@@ -68,24 +67,9 @@ def trained_resnet(depth: int = 8):
 
 
 def make_eval_fn(cfg, params, eval_n: int = 256, batch: int = 64
-                 ) -> BankableEval:
-    """Accuracy evaluator over the synthetic test set.  Returns a
-    ``BankableEval``: call it like a function for the sequential path,
-    or hand it to ``batch=True`` sweeps to evaluate a whole multiplier
-    bank in one compiled program."""
-    data = CifarBatches("test", eval_n, batch)
-    eval_batches = list(data.eval_batches())
-    images = jnp.asarray(np.stack([b["images"] for b in eval_batches]))
-    labels = jnp.asarray(np.stack([b["labels"] for b in eval_batches]))
-
-    def traceable(policy):
-        accs = [jnp.mean((jnp.argmax(
-            resnet.forward(params, images[i], cfg, policy), -1)
-            == labels[i]).astype(jnp.float32))
-            for i in range(images.shape[0])]
-        return jnp.mean(jnp.stack(accs))
-
-    def eval_fn(policy):
-        return float(jax.jit(lambda: traceable(policy))())
-
-    return BankableEval(fn=eval_fn, traceable=traceable)
+                 ) -> Workload:
+    """Accuracy evaluator over the synthetic test set — the shipped
+    ``classification`` workload: call it like a function for the
+    sequential path, or hand it to ``batch=True`` sweeps to evaluate a
+    whole multiplier bank in one compiled program."""
+    return classification(cfg, params, eval_n=eval_n, batch=batch)

@@ -17,6 +17,15 @@ SUITES = {
               "Fig 4: per-layer resilience"),
     "table_II": ("benchmarks.resilience_full",
                  "Table II: multiplier x accuracy"),
+    "heterogeneous_pareto": ("benchmarks.heterogeneous_pareto",
+                             "heterogeneous vs uniform Pareto "
+                             "(BENCH_heterogeneous.json)"),
+    "wide_width_pareto": ("benchmarks.wide_width_pareto",
+                          "composed 12/16-bit mixed-width Pareto "
+                          "(BENCH_wide.json)"),
+    "objectives_pareto": ("benchmarks.objectives_pareto",
+                          "multi-metric objective fronts "
+                          "(BENCH_objectives.json)"),
     "kernels": ("benchmarks.kernel_bench", "kernel micro-benchmarks"),
     "rank": ("benchmarks.rank_analysis", "LUT low-rank analysis"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),

@@ -75,33 +75,28 @@ def _point_dict(p: DesignPoint, width: int) -> dict:
             "network_rel_power": round(p.network_rel_power, 6)}
 
 
-def _fidelity_eval(cfg, params, eval_n: int, batch: int):
+def _fidelity_workload(cfg, params, eval_n: int, batch: int):
     """Mean |logit error| vs the f32 model (lower = better fidelity):
     the continuous axis where quantization width shows — accuracy
     saturates on the synthetic eval set long before 16-bit precision
-    is exhausted.  Returns (BankableEval-style traceable, fn)."""
+    is exhausted.  Built on the shipped ``logit_fidelity`` workload
+    (DESIGN.md §2.7), which this benchmark's inline helper graduated
+    into — same computation, same values."""
     import jax.numpy as jnp
+
+    from repro.approx.workload import logit_fidelity
     from repro.data.synthetic import CifarBatches
 
     data = CifarBatches("test", eval_n, batch)
     images = jnp.asarray(np.stack(
         [b["images"] for b in data.eval_batches()]))
-    from repro.approx.layers import EXACT_POLICY
 
-    ref = [resnet.forward(params, images[i], cfg, EXACT_POLICY)
-           for i in range(images.shape[0])]
+    def forward(policy, img):
+        return resnet.forward(params, img, cfg, policy)
 
-    def traceable(policy):
-        errs = [jnp.mean(jnp.abs(
-            resnet.forward(params, images[i], cfg, policy) - ref[i]))
-            for i in range(images.shape[0])]
-        return jnp.mean(jnp.stack(errs))
-
-    def fn(policy):
-        return float(jax.jit(lambda: traceable(policy))())
-
-    from repro.approx.resilience import BankableEval
-    return BankableEval(fn=fn, traceable=traceable)
+    return logit_fidelity(
+        forward, [images[i] for i in range(images.shape[0])],
+        name="resnet_fidelity")
 
 
 def run(n_mult: int = 6, quick: bool = False,
@@ -158,10 +153,10 @@ def run(n_mult: int = 6, quick: bool = False,
          f"n={len(names)};bit_identical={bit_identical}")
 
     # -- fidelity axis (one more banked program) ----------------------
-    fid_eval = _fidelity_eval(cfg, params, eval_n, batch)
-    fid_rows = all_layers_sweep(fid_eval, counts, names, lib,
+    fid_wl = _fidelity_workload(cfg, params, eval_n, batch)
+    fid_rows = all_layers_sweep(fid_wl, counts, names, lib,
                                 mode="lut", batch=True, rel_power=rp)
-    fidelity = {r.multiplier: r.accuracy for r in fid_rows}
+    fidelity = {r.multiplier: r.metrics["logit_mae"] for r in fid_rows}
 
     result = ExploreResult(
         baseline_accuracy=baseline,

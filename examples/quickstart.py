@@ -9,7 +9,10 @@ Walks the paper's flow end to end on one page with the spec-first API:
      against the library (cached), and run a matmul through the
      emulated approximate datapath vs the exact int8 accelerator,
   4. show the TPU-native low-rank emulation agreeing with the bit-true
-     LUT emulation, and ship the chosen config as policy JSON.
+     LUT emulation, and ship the chosen config as policy JSON,
+  5. run the objective-first DSE (DESIGN.md §2.7): a named-metric
+     Workload explored over pluggable axes (quality x power x delay)
+     with a declarative constraint-based selection.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -66,4 +69,33 @@ blob = policy.to_json()
 assert ApproxPolicy.from_json(blob).cache_key() == policy.cache_key()
 print(f"\npolicy JSON ({len(blob)} bytes) round-trips — ready for "
       f"checkpoints and per-request serving")
+
+# --- objective-first DSE: named metrics x pluggable axes (§2.7) -------------
+from repro.approx import MaxDrop, Workload, explore, select
+
+y_f32 = x @ w                                 # exact f32 reference
+wl = Workload(
+    name="toy_fidelity",
+    fn=lambda policy: {"proj_mae": float(
+        jnp.abs(policy.matmul("proj", x, w) - y_f32).mean())},
+    metrics=("proj_mae",), directions={"proj_mae": "min"},
+    layer_counts={"proj": x.shape[0] * x.shape[1] * w.shape[1]})
+
+names = [e.name for e in sel[:4]]
+result = explore(workload=wl, library=lib, multipliers=names,
+                 per_layer=False,
+                 objectives=("proj_mae", "power", "delay"))
+front = result.pareto()                       # 3-axis non-dominated front
+best = select(result, constraints={"proj_mae": MaxDrop(0.05)},
+              minimize="power", axis="all_layers")
+print(f"\nobjective-first DSE over {result.objectives}: "
+      f"{len(front)}/{len(names)} points on the front")
+for p in front:
+    print(f"  {p.multiplier:<18} mae={p.metrics['proj_mae']:.4f} "
+          f"power={100 * p.network_rel_power:.1f}% "
+          f"delay={100 * p.costs['delay']:.1f}%")
+if best is not None:
+    print(f"selected (mae within 0.05 of int8 baseline, min power): "
+          f"{best.multiplier}")
+
 print("\nOK")

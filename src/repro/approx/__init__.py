@@ -1,5 +1,13 @@
 from .quant import QuantParams, quantize, dequantize, calibrate
-from .power import rel_power_map
+from .power import (cost_axes_map, network_costs_for_assignment,
+                    rel_power_map)
+from .objectives import (AtLeast, AtMost, MaxDrop, Objective,
+                         UnknownObjectiveError, available_objectives,
+                         ensure_objective, get_objective,
+                         register_objective, select, value_of)
+from .workload import (Workload, as_workload, classification,
+                       lm_fidelity, lm_layer_mult_counts, lm_perplexity,
+                       logit_fidelity)
 from .registry import (Datapath, available_datapaths, composed_product,
                        get_datapath, register_datapath)
 from .specs import (BackendSpec, LutBank, MaterializedBackend, PolicyBank,

@@ -27,16 +27,22 @@ per-layer assignments (DESIGN.md §2.5).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Mapping, Optional
+from typing import Callable, Mapping, Optional, Sequence
 
 import numpy as np
 
+from . import objectives as objectives_mod
 from .layers import ApproxPolicy, policy_bank_eval, policy_for_lane
-from .power import (auto_rel_power, network_power_for_assignment,
-                    rel_power_map)
-from .resilience import (LayerComponents, ResilienceRow, all_layers_sweep,
-                         can_bank, per_layer_sweep)
+from .objectives import get_objective
+from .power import (auto_rel_power, cost_axes_map,
+                    network_costs_for_assignment,
+                    network_power_for_assignment, rel_power_map)
+from .resilience import (LayerComponents, ResilienceRow, _unstack_metrics,
+                         all_layers_sweep, can_bank, per_layer_sweep)
 from .specs import BackendSpec, PolicyBank
+from .workload import Workload, as_workload
+
+DEFAULT_OBJECTIVES = ("accuracy", "power")
 
 
 @dataclass(frozen=True)
@@ -46,7 +52,14 @@ class DesignPoint:
     Uniform points set ``layer`` to a layer name or "all";
     heterogeneous points set ``layer="hetero"`` and carry the full
     per-layer composition in ``assignment`` (layer name -> multiplier
-    name, ordered)."""
+    name, ordered).
+
+    ``metrics`` holds every named workload quality metric measured at
+    this point; ``accuracy`` is the legacy scalar alias for the
+    workload's PRIMARY metric (DESIGN.md §2.7).  ``costs`` holds the
+    library-derived area/delay axes next to the power columns, so
+    objective tuples like ``("accuracy", "power", "delay")`` resolve
+    off the point alone."""
     multiplier: str
     layer: str                  # layer name, "all", or "hetero"
     accuracy: float
@@ -59,6 +72,8 @@ class DesignPoint:
     # datapath the assignment was VERIFIED under; policy() reproduces it
     mode: str = "lut"
     variant: str = "ref"
+    metrics: dict = field(default_factory=dict)
+    costs: dict = field(default_factory=dict)
 
     @staticmethod
     def from_row(r: ResilienceRow) -> "DesignPoint":
@@ -66,13 +81,17 @@ class DesignPoint:
             multiplier=r.multiplier, layer=r.layer, accuracy=r.accuracy,
             network_rel_power=r.network_rel_power,
             multiplier_rel_power=r.multiplier_rel_power,
-            mult_share=r.mult_share, spec=r.spec, errors=dict(r.errors))
+            mult_share=r.mult_share, spec=r.spec, errors=dict(r.errors),
+            metrics=dict(r.metrics), costs=dict(r.costs))
 
     @staticmethod
     def from_assignment(assignment: Mapping[str, str], accuracy: float,
                         network_rel_power: float,
                         mode: str = "lut",
-                        variant: str = "ref") -> "DesignPoint":
+                        variant: str = "ref",
+                        metrics: Optional[Mapping[str, float]] = None,
+                        costs: Optional[Mapping[str, float]] = None
+                        ) -> "DesignPoint":
         """A verified heterogeneous composition as a design point; the
         distinct multipliers are summarized in ``multiplier``, the
         exact per-layer mapping preserved in ``assignment``, and the
@@ -85,7 +104,8 @@ class DesignPoint:
             network_rel_power=network_rel_power,
             multiplier_rel_power=network_rel_power, mult_share=1.0,
             spec=None, assignment=tuple(assignment.items()),
-            mode=mode, variant=variant)
+            mode=mode, variant=variant,
+            metrics=dict(metrics or {}), costs=dict(costs or {}))
 
     def policy(self, base: Optional[BackendSpec] = None) -> ApproxPolicy:
         """Deployable policy for this point: the multiplier everywhere
@@ -118,76 +138,160 @@ class DesignPoint:
             "assignment": (dict(self.assignment)
                            if self.assignment is not None else None),
             "mode": self.mode, "variant": self.variant,
+            "metrics": dict(self.metrics),
+            "costs": dict(self.costs),
         }
 
+    @staticmethod
+    def from_dict(d: Mapping) -> "DesignPoint":
+        """Inverse of ``to_dict`` (accepts pre-§2.7 dicts without
+        metrics/costs)."""
+        assignment = d.get("assignment")
+        return DesignPoint(
+            multiplier=d["multiplier"], layer=d["layer"],
+            accuracy=float(d["accuracy"]),
+            network_rel_power=float(d["network_rel_power"]),
+            multiplier_rel_power=float(d["multiplier_rel_power"]),
+            mult_share=float(d["mult_share"]),
+            spec=(BackendSpec.from_dict(d["spec"])
+                  if d.get("spec") else None),
+            errors=dict(d.get("errors") or {}),
+            assignment=(tuple(assignment.items())
+                        if assignment is not None else None),
+            mode=d.get("mode", "lut"), variant=d.get("variant", "ref"),
+            metrics=dict(d.get("metrics") or {}),
+            costs=dict(d.get("costs") or {}))
 
-def pareto_points(points: list[DesignPoint]) -> list[DesignPoint]:
-    """Non-dominated on (accuracy max, network power min), by power.
-    Ties on both axes are mutually non-dominating and all kept,
-    matching ``ApproxLibrary.pareto_front`` semantics."""
-    pts = sorted(points, key=lambda p: (p.network_rel_power, -p.accuracy))
-    front: list[DesignPoint] = []
-    best_acc = float("-inf")
-    i = 0
-    while i < len(pts):
-        j = i
-        power = pts[i].network_rel_power
-        while j < len(pts) and pts[j].network_rel_power == power:
-            j += 1
-        acc_max = pts[i].accuracy
-        if acc_max > best_acc:
-            front.extend(p for p in pts[i:j] if p.accuracy == acc_max)
-            best_acc = acc_max
-        i = j
-    return front
+
+def pareto_points(points: list[DesignPoint],
+                  objectives: Optional[Sequence[str]] = None
+                  ) -> list[DesignPoint]:
+    """Non-dominated front over named ``objectives`` (default: the
+    legacy accuracy-max / network-power-min pair).  Delegates to the
+    N-dimensional ``repro.approx.objectives.pareto_points``, whose
+    2-axis default is bit-identical — membership AND order — to the
+    historical sweep here (ties on all axes are mutually
+    non-dominating and all kept, matching
+    ``ApproxLibrary.pareto_front`` semantics)."""
+    return objectives_mod.pareto_points(
+        points, objectives if objectives is not None
+        else DEFAULT_OBJECTIVES)
 
 
 @dataclass
 class ExploreResult:
+    """DSE result: axes of measured design points over one workload.
+
+    ``baseline_metrics`` carries EVERY metric the workload measured on
+    the golden datapath; ``baseline_accuracy`` is the legacy scalar
+    alias for the PRIMARY one (``primary``, direction-aware through
+    the objectives registry).  ``objectives`` records the axis tuple
+    the exploration was asked to Pareto over — ``pareto()`` uses it by
+    default."""
+
     baseline_accuracy: float            # exact int8 golden datapath
     all_layers: list[DesignPoint] = field(default_factory=list)
     per_layer: list[DesignPoint] = field(default_factory=list)
     heterogeneous: list[DesignPoint] = field(default_factory=list)
     selected: Optional[DesignPoint] = None
+    baseline_metrics: dict = field(default_factory=dict)
+    objectives: tuple = DEFAULT_OBJECTIVES
+    primary: str = "accuracy"
 
-    def pareto(self, axis: str = "all_layers") -> list[DesignPoint]:
+    def _primary_direction(self) -> str:
+        try:
+            return get_objective(self.primary).direction
+        except KeyError:
+            return "max"
+
+    def _primary_value(self, p: DesignPoint) -> float:
+        return float(p.metrics.get(self.primary, p.accuracy))
+
+    def pareto(self, axis: str = "all_layers",
+               objectives: Optional[Sequence[str]] = None
+               ) -> list[DesignPoint]:
         """Non-dominated front of one axis ("all_layers",
-        "heterogeneous") or of their union ("combined")."""
+        "heterogeneous") or of their union ("combined"), over
+        ``objectives`` (default: the exploration's own tuple)."""
+        objs = tuple(objectives) if objectives is not None \
+            else self.objectives
         if axis == "combined":
-            return pareto_points(self.all_layers + self.heterogeneous)
-        return pareto_points(getattr(self, axis))
+            return pareto_points(self.all_layers + self.heterogeneous,
+                                 objs)
+        return pareto_points(getattr(self, axis), objs)
 
     def within(self, max_accuracy_drop: float,
                axis: str = "all_layers") -> list[DesignPoint]:
-        floor = self.baseline_accuracy - max_accuracy_drop
+        """Points whose PRIMARY metric stays within
+        ``max_accuracy_drop`` of the baseline, in the primary's own
+        direction (a min-primary like logit-MAE may RISE at most that
+        much)."""
         pts = (self.all_layers + self.heterogeneous
                if axis == "combined" else getattr(self, axis))
-        return [p for p in pts if p.accuracy >= floor]
+        if self._primary_direction() == "min":
+            ceiling = self.baseline_accuracy + max_accuracy_drop
+            return [p for p in pts if self._primary_value(p) <= ceiling]
+        floor = self.baseline_accuracy - max_accuracy_drop
+        return [p for p in pts if self._primary_value(p) >= floor]
 
     def to_json_dict(self) -> dict:
+        # persist the DIRECTIONS of the axes this result reasons with:
+        # workload metrics only register when their Workload is
+        # constructed, so a restoring process would otherwise fall
+        # back to "max" for a min-primary (logit MAE, perplexity) and
+        # silently invert every quality bound
+        directions = {}
+        for name in (*self.objectives, self.primary,
+                     *self.baseline_metrics):
+            try:
+                directions[name] = get_objective(name).direction
+            except KeyError:
+                pass
         return {
             "baseline_accuracy": self.baseline_accuracy,
             "all_layers": [p.to_dict() for p in self.all_layers],
             "per_layer": [p.to_dict() for p in self.per_layer],
             "heterogeneous": [p.to_dict() for p in self.heterogeneous],
             "selected": self.selected.to_dict() if self.selected else None,
+            "baseline_metrics": dict(self.baseline_metrics),
+            "objectives": list(self.objectives),
+            "primary": self.primary,
+            "objective_directions": directions,
         }
 
-
-def _cached_eval(eval_fn: Callable[[ApproxPolicy], float],
-                 cache: dict) -> Callable[[ApproxPolicy], float]:
-    def run(policy: ApproxPolicy) -> float:
-        key = policy.cache_key()
-        if key not in cache:
-            cache[key] = float(eval_fn(policy))
-        return cache[key]
-    return run
+    @staticmethod
+    def from_json_dict(d: Mapping) -> "ExploreResult":
+        """Inverse of ``to_json_dict`` (accepts pre-§2.7 dicts):
+        ``ExploreResult.from_json_dict(json.loads(blob))`` restores a
+        shipped exploration, round-tripping every design point and
+        re-registering the axes' directions so ``pareto``/``within``/
+        ``select`` behave identically in a fresh process (a conflicting
+        live registration raises rather than silently winning)."""
+        from .objectives import ensure_objective
+        for name, direction in (d.get("objective_directions")
+                                or {}).items():
+            ensure_objective(name, direction)
+        return ExploreResult(
+            baseline_accuracy=float(d["baseline_accuracy"]),
+            all_layers=[DesignPoint.from_dict(p)
+                        for p in d.get("all_layers", [])],
+            per_layer=[DesignPoint.from_dict(p)
+                       for p in d.get("per_layer", [])],
+            heterogeneous=[DesignPoint.from_dict(p)
+                           for p in d.get("heterogeneous", [])],
+            selected=(DesignPoint.from_dict(d["selected"])
+                      if d.get("selected") else None),
+            baseline_metrics=dict(d.get("baseline_metrics") or {}),
+            objectives=tuple(d.get("objectives") or DEFAULT_OBJECTIVES),
+            primary=d.get("primary", "accuracy"))
 
 
 def _seed_cache(cache: dict, rows: list[ResilienceRow], golden) -> None:
     """Store batched-sweep results under the SAME policy cache keys the
     sequential path would use, so later sequential (or widened)
-    explorations over the same cache dict hit instead of re-running."""
+    explorations over the same cache dict hit instead of re-running.
+    Cache values are metric DICTS (the ``Workload.cached`` convention,
+    DESIGN.md §2.7)."""
     for r in rows:
         if r.spec is None:
             continue
@@ -196,12 +300,12 @@ def _seed_cache(cache: dict, rows: list[ResilienceRow], golden) -> None:
         else:
             policy = ApproxPolicy(default=golden,
                                   overrides=[(r.layer, r.spec)])
-        cache.setdefault(policy.cache_key(), r.accuracy)
+        cache.setdefault(policy.cache_key(), dict(r.metrics))
 
 
 def explore(
-    eval_fn: Callable[[ApproxPolicy], float],
-    layer_counts: dict[str, int],
+    eval_fn: Optional[Callable[[ApproxPolicy], float]] = None,
+    layer_counts: Optional[dict[str, int]] = None,
     library=None,
     multipliers: Optional[list[str]] = None,
     mode: str = "lut",
@@ -213,6 +317,8 @@ def explore(
     batch: bool = False,
     sharding=None,
     rel_power=None,
+    workload: Optional[Workload] = None,
+    objectives: Optional[Sequence[str]] = None,
 ) -> ExploreResult:
     """One-call DSE: baseline + Table II + Fig. 4 sweeps over the
     library's case-study multipliers (or ``multipliers``), with cached
@@ -244,24 +350,57 @@ def explore(
     optionally spreads the bank axis across devices
     (``repro.launch.mesh.bank_sharding``).
 
+    **Objective-first calling convention (DESIGN.md §2.7):** pass a
+    ``workload=`` (any ``repro.approx.workload.Workload`` — shipped
+    adapters cover classification, LM logit fidelity and perplexity)
+    instead of ``eval_fn``, and optionally ``objectives=`` naming the
+    axes to Pareto over (workload metrics, ``power``/``area``/
+    ``delay`` cost axes, library error statistics):
+
+        result = explore(workload=lm_fidelity("qwen1.5-0.5b"),
+                         objectives=("logit_mae", "power", "delay"))
+        front = result.pareto()          # 3-axis non-dominated front
+
+    ``layer_counts`` defaults to the workload's own; every design
+    point carries the full metric dict next to the legacy scalar
+    columns.  Plain ``eval_fn`` call sites behave exactly as before
+    (single ``accuracy`` metric, 2-axis fronts, bit-identical).
+
     If ``quality_bound`` is given, ``result.selected`` is the
-    lowest-power all-layers point within that accuracy drop.
+    lowest-power all-layers point whose PRIMARY metric stays within
+    that drop (direction-aware; see ``objectives.select`` for the
+    fully declarative endpoint).
     """
+    wl = as_workload(workload if workload is not None else eval_fn)
+    if layer_counts is None:
+        layer_counts = wl.layer_counts
+        if layer_counts is None:
+            raise TypeError(
+                "explore() needs layer_counts (the workload carries "
+                "none)")
+    if objectives is not None:
+        for name in objectives:
+            get_objective(name)             # fail fast on unknown axes
     if library is None:
         from repro.core.library import get_default_library
         library = get_default_library()
     if multipliers is None:
         multipliers = [e.name for e in library.case_study_selection()]
     cache = cache if cache is not None else {}
-    run = _cached_eval(eval_fn, cache)
-    batch = batch and can_bank(eval_fn, mode, variant)
+    run = wl.cached(cache)
+    batch = batch and can_bank(wl, mode, variant)
 
     golden = BackendSpec.golden().materialize()
-    baseline = run(ApproxPolicy(default=golden))
+    baseline_metrics = run.measure(ApproxPolicy(default=golden))
 
-    result = ExploreResult(baseline_accuracy=baseline)
+    result = ExploreResult(
+        baseline_accuracy=baseline_metrics[wl.primary],
+        baseline_metrics=baseline_metrics,
+        objectives=(tuple(objectives) if objectives is not None
+                    else (wl.primary, "power")),
+        primary=wl.primary)
     if all_layers:
-        rows = all_layers_sweep(eval_fn if batch else run, layer_counts,
+        rows = all_layers_sweep(wl if batch else run, layer_counts,
                                 multipliers, library, mode=mode,
                                 variant=variant, batch=batch,
                                 sharding=sharding, rel_power=rel_power)
@@ -269,7 +408,7 @@ def explore(
             _seed_cache(cache, rows, golden)
         result.all_layers = [DesignPoint.from_row(r) for r in rows]
     if per_layer:
-        rows = per_layer_sweep(eval_fn if batch else run, layer_counts,
+        rows = per_layer_sweep(wl if batch else run, layer_counts,
                                multipliers, library, mode=mode,
                                base=golden, variant=variant, batch=batch,
                                sharding=sharding, rel_power=rel_power)
@@ -286,25 +425,40 @@ def select_multiplier(result: ExploreResult,
                       baseline: Optional[float] = None
                       ) -> Optional[DesignPoint]:
     """The paper's endpoint: the lowest-power circuit whose all-layers
-    accuracy stays within ``max_accuracy_drop`` of the golden int8
-    baseline.  Returns None when no candidate meets the bound."""
-    floor = (baseline if baseline is not None
-             else result.baseline_accuracy) - max_accuracy_drop
-    ok = [p for p in result.all_layers if p.accuracy >= floor]
-    if not ok:
-        return None
-    return min(ok, key=lambda p: (p.network_rel_power, -p.accuracy))
+    PRIMARY metric stays within ``max_accuracy_drop`` of the golden
+    int8 baseline (direction-aware: a min-primary may rise at most
+    that much).  Returns None when no candidate meets the bound.  The
+    declarative generalization is ``repro.approx.objectives.select``,
+    which this delegates to.
+    """
+    return objectives_mod.select(
+        result,
+        constraints={result.primary: _budget(result, max_accuracy_drop,
+                                             baseline)},
+        minimize="power", axis="all_layers")
+
+
+def _budget(result: ExploreResult, drop: float,
+            baseline: Optional[float] = None):
+    """``max_accuracy_drop`` as an absolute constraint on the result's
+    primary axis, in its own direction (absolute — not ``MaxDrop`` —
+    so an explicit ``baseline`` override is honored)."""
+    base = (baseline if baseline is not None
+            else result.baseline_accuracy)
+    if result._primary_direction() == "min":
+        return objectives_mod.AtMost(base + drop)
+    return objectives_mod.AtLeast(base - drop)
 
 
 def select_point(result: ExploreResult, max_accuracy_drop: float,
                  axis: str = "combined") -> Optional[DesignPoint]:
     """Generalized endpoint over any result axis (default: uniform ∪
     heterogeneous): the lowest-power verified point within the
-    accuracy budget."""
-    ok = result.within(max_accuracy_drop, axis=axis)
-    if not ok:
-        return None
-    return min(ok, key=lambda p: (p.network_rel_power, -p.accuracy))
+    (direction-aware) primary-metric budget."""
+    return objectives_mod.select(
+        result,
+        constraints={result.primary: _budget(result, max_accuracy_drop)},
+        minimize="power", axis=axis)
 
 
 # ----------------------------------------------------------------------
@@ -343,8 +497,11 @@ def compose_assignments(components: LayerComponents,
             if key not in seen:
                 seen.add(key)
                 out.append(row)
+    # tie-break toward better predicted quality IN THE PRIMARY'S OWN
+    # DIRECTION (a min-primary's predict_accuracy is higher-is-worse)
+    sign = 1.0 if components.direction == "min" else -1.0
     out.sort(key=lambda r: (components.predict_power(r),
-                            -components.predict_accuracy(r)))
+                            sign * components.predict_accuracy(r)))
     return out[:top_k]
 
 
@@ -425,36 +582,41 @@ def verify_assignments(
     """
     if not assignments:
         return []
+    wl = as_workload(eval_fn)
     layers = tuple(dict.fromkeys(
         l for a in assignments for l in a))
     pbank = PolicyBank.from_assignments(assignments, library,
                                         layers=layers)
-    batch = batch and can_bank(eval_fn, mode, variant)
+    batch = batch and can_bank(wl, mode, variant)
     if batch:
-        accs = np.asarray(policy_bank_eval(
-            eval_fn.traceable, pbank, mode=mode, variant=variant,
-            sharding=sharding, assign_sharding=assign_sharding))
-        accs = [float(a) for a in accs]
+        out = policy_bank_eval(
+            wl.traceable_metrics, pbank, mode=mode, variant=variant,
+            sharding=sharding, assign_sharding=assign_sharding)
+        lanes = _unstack_metrics(out, wl.metrics, pbank.n_policies)
     else:
-        run = _cached_eval(eval_fn, cache) if cache is not None else eval_fn
-        accs = [float(run(policy_for_lane(pbank, p, mode=mode,
-                                          variant=variant)))
-                for p in range(pbank.n_policies)]
+        run = wl.cached(cache) if cache is not None else wl
+        lanes = [run.measure(policy_for_lane(pbank, p, mode=mode,
+                                             variant=variant))
+                 for p in range(pbank.n_policies)]
     if cache is not None:
-        for p, acc in enumerate(accs):
+        for p, metrics in enumerate(lanes):
             cache.setdefault(
                 policy_for_lane(pbank, p, mode=mode,
-                                variant=variant).cache_key(), acc)
+                                variant=variant).cache_key(),
+                dict(metrics))
     if rel_power is None:
         rel_power = (auto_rel_power(library, pbank.bank.names)
                      or rel_power_map(library, pbank.bank.names))
+    cost_map = cost_axes_map(library, pbank.bank.names)
     points = []
-    for p, acc in enumerate(accs):
+    for p, metrics in enumerate(lanes):
         a = pbank.assignment(p)
         points.append(DesignPoint.from_assignment(
-            a, acc,
+            a, metrics[wl.primary],
             network_power_for_assignment(layer_counts, a, rel_power),
-            mode=mode, variant=variant))
+            mode=mode, variant=variant, metrics=metrics,
+            costs=network_costs_for_assignment(layer_counts, a,
+                                               cost_map)))
     return points
 
 
@@ -504,28 +666,32 @@ def explore_heterogeneous(
     Returns an ``ExploreResult`` whose ``per_layer`` axis holds the
     stage-1 sweep (empty when ``components`` was supplied).
     """
+    wl = as_workload(eval_fn)
     if library is None:
         from repro.core.library import get_default_library
         library = get_default_library()
     if multipliers is None:
         multipliers = [e.name for e in library.case_study_selection()]
     cache = cache if cache is not None else {}
-    run = _cached_eval(eval_fn, cache)
+    run = wl.cached(cache)
 
     golden = BackendSpec.golden().materialize()
     per_layer_points: list[DesignPoint] = []
+    baseline_metrics: dict = {}
     if components is None:
-        baseline = run(ApproxPolicy(default=golden))
-        do_batch = batch and can_bank(eval_fn, mode, variant)
-        rows = per_layer_sweep(eval_fn if do_batch else run, layer_counts,
+        baseline_metrics = run.measure(ApproxPolicy(default=golden))
+        baseline = baseline_metrics[wl.primary]
+        do_batch = batch and can_bank(wl, mode, variant)
+        rows = per_layer_sweep(wl if do_batch else run, layer_counts,
                                multipliers, library, mode=mode,
                                base=golden, variant=variant,
                                batch=do_batch, sharding=sharding,
                                rel_power=rel_power)
         if do_batch:
             _seed_cache(cache, rows, golden)
-        components = LayerComponents.from_rows(rows, layer_counts,
-                                               baseline)
+        components = LayerComponents.from_rows(
+            rows, layer_counts, baseline,
+            direction=wl.primary_direction)
         per_layer_points = [DesignPoint.from_row(r) for r in rows]
     baseline = components.baseline
 
@@ -543,17 +709,20 @@ def explore_heterogeneous(
             assignments.append(a)
 
     hetero = verify_assignments(
-        eval_fn, assignments, layer_counts, library, mode=mode,
+        wl, assignments, layer_counts, library, mode=mode,
         variant=variant, batch=batch, sharding=sharding,
         assign_sharding=assign_sharding, cache=cache,
         rel_power=rel_power)
 
     result = ExploreResult(baseline_accuracy=baseline,
                            per_layer=per_layer_points,
-                           heterogeneous=hetero)
-    ok = [p for p in result.within(quality_bound, axis="heterogeneous")
-          if power_budget is None or p.network_rel_power <= power_budget]
-    if ok:
-        result.selected = min(ok, key=lambda p: (p.network_rel_power,
-                                                 -p.accuracy))
+                           heterogeneous=hetero,
+                           baseline_metrics=baseline_metrics,
+                           objectives=(wl.primary, "power"),
+                           primary=wl.primary)
+    constraints = {wl.primary: _budget(result, quality_bound)}
+    if power_budget is not None:
+        constraints["power"] = objectives_mod.AtMost(power_budget)
+    result.selected = objectives_mod.select(
+        result, constraints, minimize="power", axis="heterogeneous")
     return result

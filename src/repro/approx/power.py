@@ -24,7 +24,7 @@ tree) instead of looking same-priced.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Mapping, Optional
+from typing import Any, Mapping, Optional
 
 
 @dataclass(frozen=True)
@@ -91,6 +91,79 @@ def auto_rel_power(library, names) -> Optional[dict[str, float]]:
             "the library — pass rel_power=rel_power_map(library, "
             "names, ref=<your reference circuit>)")
     return rel_power_map(library, names, ref=ref)
+
+
+COST_AXES = ("area", "delay")
+
+
+def cost_axes_map(library, names) -> dict[str, dict[str, float]]:
+    """Per-multiplier relative AREA and DELAY for a candidate set — the
+    library-derived cost axes beyond power (DESIGN.md §2.7, the paper's
+    "other circuit parameters").
+
+    Each entry is normalized against the exact multiplier of ITS OWN
+    width (``mul{W}u_exact``), mirroring the library's same-width
+    ``rel_power`` convention; when the library lacks that entry (tiny
+    demo libraries, composed widths) the reference cost is synthesized
+    from an exact array multiplier of that width — the same fallback
+    ``ApproxLibrary.add_composed`` uses for ``rel_power`` — so every
+    value in one map stays on the same relative scale (never raw
+    µm²/ps mixed with ~1.0 ratios).  Resilience sweeps thread these
+    onto every row/point so objective tuples like
+    ``("accuracy", "power", "delay")`` resolve without re-touching the
+    library."""
+    refs: dict[int, Any] = {}
+    out: dict[str, dict[str, float]] = {}
+    for n in names:
+        entry = library.entry(n)
+        if entry.width not in refs:
+            ref_name = f"mul{entry.width}u_exact"
+            if ref_name in library.entries:
+                refs[entry.width] = library.entry(ref_name).cost
+            else:
+                from repro.core.cost import evaluate_cost
+                from repro.core.seeds import array_multiplier
+                refs[entry.width] = evaluate_cost(
+                    array_multiplier(entry.width))
+        ref = refs[entry.width]
+        out[n] = {
+            "area": (entry.cost.area / ref.area if ref.area > 0
+                     else entry.cost.area),
+            "delay": (entry.cost.delay / ref.delay if ref.delay > 0
+                      else entry.cost.delay),
+        }
+    return out
+
+
+def network_costs_for_assignment(
+    layer_counts: Mapping[str, int],
+    assignment: Mapping[str, str],
+    cost_map: Mapping[str, Mapping[str, float]],
+    base: Optional[Mapping[str, float]] = None,
+) -> dict[str, float]:
+    """Network-level area/delay of a heterogeneous assignment, through
+    the same one-code-path discipline as
+    ``network_power_for_assignment``: AREA aggregates like power (the
+    count-weighted mean over layers, unassigned layers at the exact
+    datapath's 1.0), DELAY is the critical path — the MAX over the
+    datapaths in use (an accelerator's multiplier array clocks at its
+    slowest circuit)."""
+    base = dict(base) if base is not None else {a: 1.0 for a in COST_AXES}
+    layers, delays = [], []
+    for name, count in layer_counts.items():
+        if name in assignment:
+            c = cost_map[assignment[name]]
+            layers.append(LayerPower(name, count, assignment[name],
+                                     c["area"]))
+            delays.append(c["delay"])
+        else:
+            layers.append(LayerPower(name, count, "exact", base["area"]))
+            delays.append(base["delay"])
+    # the exact datapath's delay only bounds the path when some layer
+    # actually runs it; a fully-assigned network clocks at its own
+    # slowest circuit, which may beat the exact multiplier
+    return {"area": network_relative_power(layers),
+            "delay": max(delays, default=base["delay"])}
 
 
 def network_power_for_assignment(

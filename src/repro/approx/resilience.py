@@ -1,6 +1,8 @@
 """Resilience analysis driver (paper Sec. IV, Fig. 4 and Table II).
 
-Given an evaluation closure ``eval_fn(policy) -> accuracy`` and the
+Given an evaluation handle — a ``repro.approx.workload.Workload``, a
+``BankableEval``, or a plain ``eval_fn(policy) -> accuracy`` closure
+(all normalized through ``as_workload``, DESIGN.md §2.7) — and the
 model's per-layer multiplication counts, sweeps approximate multipliers
   * one layer at a time (Fig. 4 — layer sensitivity), and
   * across all layers at once (Table II — accuracy vs. power trade-off),
@@ -31,27 +33,42 @@ import numpy as np
 
 from .backend import BackendLike
 from .layers import ApproxPolicy, bank_eval
-from .power import auto_rel_power, network_power_for_assignment
+from .power import (auto_rel_power, cost_axes_map,
+                    network_costs_for_assignment,
+                    network_power_for_assignment)
 from .registry import get_datapath
 from .specs import BackendSpec, MaterializedBackend, bank_for
+from .workload import Workload, as_workload
 
 
 @dataclass
 class ResilienceRow:
+    """One sweep measurement.  ``metrics`` carries EVERY named quality
+    metric the workload measured (DESIGN.md §2.7); ``accuracy`` is the
+    legacy scalar alias for the workload's PRIMARY metric (named for
+    the paper's classification case — it holds e.g. a logit-MAE for
+    fidelity workloads).  ``costs`` carries the library-derived
+    area/delay axes next to the power columns."""
+
     multiplier: str
     layer: str                 # layer name or "all"
-    accuracy: float
+    accuracy: float            # = metrics[workload.primary]
     network_rel_power: float   # count-weighted multiplier power
     multiplier_rel_power: float
     mult_share: float          # fraction of network mults in this layer
     errors: dict = field(default_factory=dict)
     spec: Optional[BackendSpec] = None
+    metrics: dict = field(default_factory=dict)
+    costs: dict = field(default_factory=dict)
 
 
 @dataclass
 class BankableEval:
     """An evaluation function in both calling conventions the sweeps
-    understand.
+    understand.  Subsumed by ``repro.approx.workload.Workload`` (the
+    multi-metric generalization, DESIGN.md §2.7) — the sweeps
+    normalize either through ``as_workload``; BankableEval remains the
+    lightest way to hand over a single scalar accuracy.
 
     ``fn(policy) -> float`` is the sequential closure (free to jit
     internally, call numpy, return a Python float).  ``traceable`` is
@@ -94,30 +111,41 @@ def _backends_for(multiplier_names, library, mode: str, rank=None,
     return out
 
 
-def _row(library, mname, layer, acc, layer_counts, spec,
-         rel_power=None) -> ResilienceRow:
+def _row(library, mname, layer, metrics, primary, layer_counts, spec,
+         rel_power=None, cost_map=None) -> ResilienceRow:
     entry = library.entry(mname)
     # rel_power overrides rebase power onto a common reference for
     # mixed-width sweeps (power.rel_power_map, DESIGN.md §2.6); the
     # default is the library's same-width convention
     rp = (rel_power[mname] if rel_power is not None
           else entry.rel_power)
+    acc = float(metrics[primary])
     total = sum(layer_counts.values())
     if layer == "all":
+        assignment = {l: mname for l in layer_counts}
         return ResilienceRow(
             multiplier=mname, layer="all", accuracy=acc,
             network_rel_power=rp,
             multiplier_rel_power=rp,
-            mult_share=1.0, errors=entry.errors.as_dict(), spec=spec)
+            mult_share=1.0, errors=entry.errors.as_dict(), spec=spec,
+            metrics=dict(metrics),
+            costs=(network_costs_for_assignment(layer_counts, assignment,
+                                                cost_map)
+                   if cost_map is not None else {}))
     # a per-layer row is the one-layer special case of a heterogeneous
-    # assignment; both score power through the same component model
+    # assignment; both score power (and area/delay) through the same
+    # component model
     return ResilienceRow(
         multiplier=mname, layer=layer, accuracy=acc,
         network_rel_power=network_power_for_assignment(
             layer_counts, {layer: mname}, {mname: rp}),
         multiplier_rel_power=rp,
         mult_share=layer_counts[layer] / total,
-        errors=entry.errors.as_dict(), spec=spec)
+        errors=entry.errors.as_dict(), spec=spec,
+        metrics=dict(metrics),
+        costs=(network_costs_for_assignment(layer_counts, {layer: mname},
+                                            cost_map)
+               if cost_map is not None else {}))
 
 
 # ----------------------------------------------------------------------
@@ -146,10 +174,14 @@ class LayerComponents:
     counts: tuple[int, ...]         # per layers[j] mult counts
     total_count: int                # whole-network mult count
     baseline: float                 # golden int8 accuracy
+    direction: str = "max"          # primary metric direction (§2.7):
+                                    # "min" primaries (logit MAE,
+                                    # perplexity) flip the drop sign
 
     @staticmethod
     def from_rows(rows: "list[ResilienceRow]", layer_counts: dict,
-                  baseline: float) -> "LayerComponents":
+                  baseline: float,
+                  direction: str = "max") -> "LayerComponents":
         """Distill per-layer sweep rows (any order, any coverage) into
         component matrices.  Missing (layer, multiplier) cells fall back
         to the baseline accuracy (no measured evidence of damage)."""
@@ -171,18 +203,24 @@ class LayerComponents:
             rel_power=rel_power,
             counts=tuple(int(layer_counts[l]) for l in layers),
             total_count=int(sum(layer_counts.values())),
-            baseline=float(baseline))
+            baseline=float(baseline), direction=direction)
 
     def drop(self) -> "np.ndarray":
-        """(n_layers, n_mult) per-layer accuracy drops, clipped >= 0."""
+        """(n_layers, n_mult) per-layer quality DEGRADATIONS, clipped
+        >= 0 — baseline − quality for maximize primaries, quality −
+        baseline for minimize ones (a fidelity workload's MAE *rises*
+        under approximation)."""
+        if self.direction == "min":
+            return np.maximum(self.quality - self.baseline, 0.0)
         return np.maximum(self.baseline - self.quality, 0.0)
 
     def predict_accuracy(self, assign: "np.ndarray") -> float:
-        """Additive-drop estimate for one assignment row (indices into
-        ``multipliers``)."""
+        """Additive-drop estimate of the primary metric for one
+        assignment row (indices into ``multipliers``)."""
         d = self.drop()
-        return self.baseline - float(
-            sum(d[j, i] for j, i in enumerate(assign)))
+        total = float(sum(d[j, i] for j, i in enumerate(assign)))
+        return (self.baseline + total if self.direction == "min"
+                else self.baseline - total)
 
     def predict_power(self, assign: "np.ndarray") -> float:
         """Exact count-weighted power of one assignment row (layers
@@ -242,31 +280,35 @@ def per_layer_sweep(
     onto a common reference (``power.auto_rel_power``) unless an
     explicit ``rel_power`` map is given.
     """
+    wl = as_workload(eval_fn)
     base = base if base is not None else BackendSpec.golden().materialize()
     if rel_power is None:
         rel_power = auto_rel_power(library, multiplier_names)
+    cost_map = cost_axes_map(library, multiplier_names)
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
     rows = []
     if batch:
-        traceable = _require_bankable(eval_fn, mode, variant)
+        wl = _require_bankable(wl, mode, variant)
         bank = bank_for(multiplier_names, library)
         for layer in layer_counts:
-            accs = np.asarray(bank_eval(traceable, bank, mode=mode,
-                                        variant=variant, base=base,
-                                        layer_pattern=layer,
-                                        sharding=sharding))
-            for mname, acc in zip(multiplier_names, accs):
-                rows.append(_row(library, mname, layer, float(acc),
-                                 layer_counts, backends[mname].spec,
-                                 rel_power))
+            lanes = _unstack_metrics(
+                bank_eval(wl.traceable_metrics, bank, mode=mode,
+                          variant=variant, base=base,
+                          layer_pattern=layer, sharding=sharding),
+                wl.metrics, len(multiplier_names))
+            for mname, metrics in zip(multiplier_names, lanes):
+                rows.append(_row(library, mname, layer, metrics,
+                                 wl.primary, layer_counts,
+                                 backends[mname].spec, rel_power,
+                                 cost_map))
         return rows
     for layer in layer_counts:
         for mname, be in backends.items():
             policy = ApproxPolicy(default=base, overrides=[(layer, be)])
-            acc = float(eval_fn(policy))
-            rows.append(_row(library, mname, layer, acc, layer_counts,
-                             be.spec, rel_power))
+            rows.append(_row(library, mname, layer, wl.measure(policy),
+                             wl.primary, layer_counts, be.spec,
+                             rel_power, cost_map))
     return rows
 
 
@@ -295,34 +337,49 @@ def all_layers_sweep(
     §2.6), with power auto-rebased onto a common reference
     (``power.auto_rel_power``) unless ``rel_power`` overrides it.
     """
+    wl = as_workload(eval_fn)
     if rel_power is None:
         rel_power = auto_rel_power(library, multiplier_names)
+    cost_map = cost_axes_map(library, multiplier_names)
     backends = _backends_for(multiplier_names, library, mode,
                              variant=variant)
     if batch:
-        traceable = _require_bankable(eval_fn, mode, variant)
+        wl = _require_bankable(wl, mode, variant)
         bank = bank_for(multiplier_names, library)
-        accs = np.asarray(bank_eval(traceable, bank, mode=mode,
-                                    variant=variant, sharding=sharding))
-        return [_row(library, mname, "all", float(acc), layer_counts,
-                     backends[mname].spec, rel_power)
-                for mname, acc in zip(multiplier_names, accs)]
+        lanes = _unstack_metrics(
+            bank_eval(wl.traceable_metrics, bank, mode=mode,
+                      variant=variant, sharding=sharding),
+            wl.metrics, len(multiplier_names))
+        return [_row(library, mname, "all", metrics, wl.primary,
+                     layer_counts, backends[mname].spec, rel_power,
+                     cost_map)
+                for mname, metrics in zip(multiplier_names, lanes)]
     rows = []
     for mname, be in backends.items():
         policy = ApproxPolicy(default=be)
-        acc = float(eval_fn(policy))
-        rows.append(_row(library, mname, "all", acc, layer_counts,
-                         be.spec, rel_power))
+        rows.append(_row(library, mname, "all", wl.measure(policy),
+                         wl.primary, layer_counts, be.spec, rel_power,
+                         cost_map))
     return rows
 
 
-def _require_bankable(eval_fn, mode: str, variant: str):
-    if not can_bank(eval_fn, mode, variant):
+def _unstack_metrics(out, metric_names, n: int) -> list[dict]:
+    """Split a banked evaluation's stacked metric dict ``{metric:
+    (n,) array}`` into one float dict per lane, in workload metric
+    order."""
+    arrs = {m: np.asarray(out[m]) for m in metric_names}
+    return [{m: float(arrs[m][i]) for m in metric_names}
+            for i in range(n)]
+
+
+def _require_bankable(eval_fn, mode: str, variant: str) -> Workload:
+    wl = as_workload(eval_fn)
+    if not can_bank(wl, mode, variant):
         raise ValueError(
-            "batch=True needs a BankableEval (an eval_fn with a "
-            "traceable core) and a bankable datapath; "
-            f"got {type(eval_fn).__name__} with mode={mode!r} "
-            f"variant={variant!r}.  Wrap your eval in BankableEval or "
-            "use explore(batch=True), which falls back to the "
-            "sequential path.")
-    return eval_fn.traceable
+            "batch=True needs a bank-traceable evaluation (a Workload "
+            "with traceable_metrics, or a BankableEval) and a bankable "
+            f"datapath; got {type(eval_fn).__name__} with mode={mode!r} "
+            f"variant={variant!r}.  Wrap your eval in "
+            "BankableEval/Workload or use explore(batch=True), which "
+            "falls back to the sequential path.")
+    return wl

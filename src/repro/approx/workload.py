@@ -1,0 +1,349 @@
+"""Workload layer: model + eval data + NAMED quality metrics
+(DESIGN.md §2.7).
+
+A ``Workload`` bundles everything the DSE needs to measure application-
+level quality under an ``ApproxPolicy``, in both calling conventions
+the sweeps understand (subsuming the older scalar ``BankableEval``):
+
+  * ``fn(policy) -> {metric: float}`` — the sequential closure (free to
+    jit internally, call numpy, return Python floats), and
+  * ``traceable_metrics(policy) -> {metric: jax scalar}`` — its
+    pure-jax core, which the batched engines wrap in ``jit(vmap(...))``
+    over a multiplier bank (DESIGN.md §2.4).
+
+Metric names are registered as ``workload``-provenance axes in
+``repro.approx.objectives`` at construction, each with a direction, so
+``explore(workload=..., objectives=(...))`` can Pareto over any mix of
+quality metrics and library cost axes.  ``primary`` names the metric
+legacy scalar call sites read: ``workload(policy)`` returns
+``float(fn(policy)[primary])`` and the scalar-only ``.traceable``
+property projects the traceable core the same way, so a ``Workload``
+drops into every ``eval_fn=``-shaped call site unchanged.
+
+Shipped adapters (built on ``repro.models``):
+
+  * ``classification(cfg, params)`` — ResNet / synthetic-CIFAR top-1
+    accuracy, the paper's case study (the historical behavior);
+  * ``logit_fidelity(forward, inputs)`` — generic logit-MAE + top-1
+    agreement vs the f32 model (the continuous quality axis where
+    datapath width shows; DESIGN.md §2.6);
+  * ``lm_fidelity(cfg)`` / ``lm_perplexity(cfg)`` — the same fidelity
+    metrics, and loss/perplexity, for any registered decoder-family LM
+    config (``repro.configs.get_config``/``repro.models.registry``),
+    so resilience analysis and DSE run over LM scenarios, not just
+    ResNet.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
+
+from .layers import ApproxPolicy, EXACT_POLICY
+from .objectives import ensure_objective
+
+MetricFn = Callable[[ApproxPolicy], Mapping[str, Any]]
+
+
+@dataclass
+class Workload:
+    """A named evaluation scenario: policy in, metric dict out.
+
+    ``metrics`` fixes the metric names (and their order in sweep rows);
+    ``directions`` maps each to "max"/"min" (default "max") and is
+    registered into the objectives registry at construction.
+    ``layer_counts`` optionally carries the model's per-layer
+    multiplication counts so ``explore(workload=...)`` needs no second
+    argument.  ``traceable_metrics`` may be ``None`` — the workload
+    then runs on the sequential sweep paths only (``batch=True``
+    requests fall back, exactly like a plain-callable eval)."""
+
+    name: str
+    fn: MetricFn
+    metrics: tuple[str, ...]
+    primary: Optional[str] = None
+    traceable_metrics: Optional[MetricFn] = None
+    directions: Mapping[str, str] = field(default_factory=dict)
+    layer_counts: Optional[dict[str, int]] = None
+
+    def __post_init__(self):
+        if not self.metrics:
+            raise ValueError("a Workload needs at least one metric")
+        if self.primary is None:
+            self.primary = self.metrics[0]
+        if self.primary not in self.metrics:
+            raise ValueError(f"primary {self.primary!r} not among "
+                             f"metrics {self.metrics}")
+        for m in self.metrics:
+            ensure_objective(m, self.directions.get(m, "max"),
+                             source="workload")
+
+    # -- calling conventions -------------------------------------------
+    def measure(self, policy: ApproxPolicy) -> dict[str, float]:
+        """Sequential evaluation: every metric as a Python float, in
+        ``metrics`` order."""
+        out = self.fn(policy)
+        return {m: float(out[m]) for m in self.metrics}
+
+    def __call__(self, policy: ApproxPolicy) -> float:
+        """Legacy scalar convention: the primary metric's value."""
+        return float(self.fn(policy)[self.primary])
+
+    @property
+    def primary_direction(self) -> str:
+        return self.directions.get(self.primary, "max")
+
+    @property
+    def traceable(self):
+        """Scalar-primary projection of the traceable core — the shape
+        ``bank_eval``/``policy_bank_eval`` call sites and ``can_bank``
+        historically expect (None when the workload has no traceable
+        core; unused metric computations are dead-code-eliminated by
+        XLA)."""
+        if self.traceable_metrics is None:
+            return None
+        tm, primary = self.traceable_metrics, self.primary
+        return lambda policy: tm(policy)[primary]
+
+    def cached(self, cache: dict) -> "Workload":
+        """The same workload through a policy-keyed metric-dict cache
+        (the ``explore()`` resume/widen mechanism)."""
+        def fn(policy: ApproxPolicy) -> dict[str, float]:
+            key = policy.cache_key()
+            if key not in cache:
+                cache[key] = self.measure(policy)
+            return cache[key]
+        return replace(self, fn=fn)
+
+
+def as_workload(eval_fn) -> Workload:
+    """Normalize any sweep evaluation handle into a ``Workload``:
+
+      * a ``Workload`` passes through unchanged;
+      * a ``BankableEval`` (anything with ``fn`` + ``traceable``
+        attributes) becomes a single-metric ``accuracy`` workload whose
+        traceable core is preserved for the batched engines;
+      * a plain callable becomes a sequential-only ``accuracy``
+        workload.
+
+    This is the shim that keeps every pre-§2.7 ``eval_fn(policy) ->
+    float`` call site working across the sweeps and the DSE facade."""
+    if isinstance(eval_fn, Workload):
+        return eval_fn
+    traceable = getattr(eval_fn, "traceable", None)
+    seq = getattr(eval_fn, "fn", eval_fn)
+    if not callable(seq):
+        raise TypeError(f"not an evaluation function: {eval_fn!r}")
+    return Workload(
+        name=getattr(eval_fn, "name", None)
+        or getattr(eval_fn, "__name__", type(eval_fn).__name__),
+        fn=lambda policy: {"accuracy": seq(policy)},
+        metrics=("accuracy",),
+        traceable_metrics=(None if traceable is None else
+                           (lambda policy: {"accuracy": traceable(policy)})),
+        directions={"accuracy": "max"})
+
+
+# ----------------------------------------------------------------------
+# Shipped adapters
+# ----------------------------------------------------------------------
+def classification(cfg, params, *, eval_n: int = 256, batch: int = 64,
+                   name: Optional[str] = None) -> Workload:
+    """ResNet / synthetic-CIFAR top-1 accuracy — the paper's case-study
+    quality metric, as a bank-traceable workload (drop-in for the
+    historical ``BankableEval`` the resilience benchmarks built by
+    hand)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data.synthetic import CifarBatches
+    from repro.models import resnet
+
+    data = CifarBatches("test", eval_n, batch)
+    eval_batches = list(data.eval_batches())
+    images = jnp.asarray(np.stack([b["images"] for b in eval_batches]))
+    labels = jnp.asarray(np.stack([b["labels"] for b in eval_batches]))
+
+    def traceable_metrics(policy):
+        accs = [jnp.mean((jnp.argmax(
+            resnet.forward(params, images[i], cfg, policy), -1)
+            == labels[i]).astype(jnp.float32))
+            for i in range(images.shape[0])]
+        return {"accuracy": jnp.mean(jnp.stack(accs))}
+
+    def fn(policy):
+        out = jax.jit(lambda: traceable_metrics(policy))()
+        return {k: float(v) for k, v in out.items()}
+
+    return Workload(
+        name=name or f"classification[resnet{getattr(cfg, 'depth', '')}]",
+        fn=fn, metrics=("accuracy",), traceable_metrics=traceable_metrics,
+        directions={"accuracy": "max"},
+        layer_counts=resnet.layer_mult_counts(cfg))
+
+
+def logit_fidelity(forward, inputs: Sequence[Any], *,
+                   ref_policy: ApproxPolicy = EXACT_POLICY,
+                   name: str = "logit_fidelity",
+                   layer_counts: Optional[dict[str, int]] = None
+                   ) -> Workload:
+    """Logit fidelity vs a reference datapath (default: exact f32).
+
+    ``forward(policy, x) -> logits`` is the model closure; ``inputs``
+    the eval batches.  Metrics:
+
+      * ``logit_mae`` (minimize) — mean over batches of the per-batch
+        mean |logits − reference|, the continuous axis where
+        quantization/datapath width shows while top-1 accuracy
+        saturates (DESIGN.md §2.6);
+      * ``top1_agreement`` (maximize) — fraction of argmax decisions
+        matching the reference.
+
+    The reference logits are computed once, eagerly, at construction.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    inputs = list(inputs)
+    ref = [forward(ref_policy, x) for x in inputs]
+
+    def traceable_metrics(policy):
+        maes, agree = [], []
+        for x, r in zip(inputs, ref):
+            logits = forward(policy, x)
+            maes.append(jnp.mean(jnp.abs(logits - r)))
+            agree.append(jnp.mean(
+                (jnp.argmax(logits, -1) == jnp.argmax(r, -1))
+                .astype(jnp.float32)))
+        return {"logit_mae": jnp.mean(jnp.stack(maes)),
+                "top1_agreement": jnp.mean(jnp.stack(agree))}
+
+    def fn(policy):
+        out = jax.jit(lambda: traceable_metrics(policy))()
+        return {k: float(v) for k, v in out.items()}
+
+    return Workload(name=name, fn=fn,
+                    metrics=("logit_mae", "top1_agreement"),
+                    primary="logit_mae",
+                    traceable_metrics=traceable_metrics,
+                    directions={"logit_mae": "min",
+                                "top1_agreement": "max"},
+                    layer_counts=layer_counts)
+
+
+def _lm_setup(cfg, params, seed: int):
+    """Resolve (cfg, params, model fns) for the LM adapters; ``cfg``
+    may be an ``LMConfig`` or a registered arch name (resolved through
+    ``repro.configs.get_config(...).reduced()`` so adapters stay
+    smoke-test sized by default)."""
+    import jax
+
+    from repro.models.registry import model_fns
+
+    if isinstance(cfg, str):
+        from repro.configs import get_config
+        cfg = get_config(cfg).reduced()
+    if cfg.family == "encdec":
+        raise ValueError(
+            "the LM workload adapters drive decoder-family configs "
+            "(dense/moe/ssm/hybrid/vlm); encoder-decoder models need "
+            "audio/encoder inputs — build a logit_fidelity workload "
+            "with your own forward closure instead")
+    fns = model_fns(cfg)
+    if params is None:
+        params = fns.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params, fns
+
+
+def _lm_token_batches(cfg, batch: int, seq_len: int, n_batches: int,
+                      seed: int):
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import token_stream
+
+    out = []
+    for i in range(n_batches):
+        tokens, targets = token_stream(cfg.vocab, batch, seq_len,
+                                       step=i, seed=seed)
+        out.append({"tokens": jnp.asarray(tokens),
+                    "targets": jnp.asarray(targets)})
+    return out
+
+
+def lm_layer_mult_counts(cfg, batch: int, seq_len: int) -> dict[str, int]:
+    """Per-layer-tag multiplication counts for a dense decoder forward
+    (the power model's weights).  Layer *tags* are shared across the
+    scanned blocks ("attn.wq", "ffn.wi", ...; see
+    ``repro.models.common``), so each tag's count aggregates over all
+    ``n_layers`` — a per-tag policy override applies to that projection
+    in EVERY block, and its power share accounts for all of them.
+    Families with mixers beyond attention (ssm/moe/hybrid) should pass
+    explicit counts for their extra tags."""
+    from .layers import dense_mult_count
+
+    t = batch * seq_len
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    counts = {
+        "attn.wq": dense_mult_count((t, d), (d, h * hd)),
+        "attn.wk": dense_mult_count((t, d), (d, hk * hd)),
+        "attn.wv": dense_mult_count((t, d), (d, hk * hd)),
+        "attn.wo": dense_mult_count((t, h * hd), (h * hd, d)),
+        "ffn.wi": dense_mult_count((t, d), (d, cfg.d_ff)),
+        "ffn.wo": dense_mult_count((t, cfg.d_ff), (cfg.d_ff, d)),
+    }
+    if cfg.act == "silu":
+        counts["ffn.wg"] = dense_mult_count((t, d), (d, cfg.d_ff))
+    return {k: v * cfg.n_layers for k, v in counts.items()}
+
+
+def lm_fidelity(cfg: Union[str, Any], params=None, *, batch: int = 2,
+                seq_len: int = 16, n_batches: int = 2,
+                seed: int = 0) -> Workload:
+    """Decoder logit fidelity vs the f32 model: prefill the LM on
+    deterministic synthetic token batches and compare the last-position
+    logits against the exact-datapath reference — ``logit_mae``
+    (minimize, primary) + ``top1_agreement`` (maximize), the metric
+    pair previously inlined in ``benchmarks/wide_width_pareto.py``, now
+    over ANY registered decoder config."""
+    cfg, params, fns = _lm_setup(cfg, params, seed)
+    batches = _lm_token_batches(cfg, batch, seq_len, n_batches, seed)
+
+    def forward(policy, b):
+        cache = fns.init_cache(cfg, batch, seq_len)
+        logits, _ = fns.forward_prefill(params, b, cache, cfg, policy)
+        return logits
+
+    return logit_fidelity(
+        forward, batches, name=f"lm_fidelity[{cfg.name}]",
+        layer_counts=lm_layer_mult_counts(cfg, batch, seq_len))
+
+
+def lm_perplexity(cfg: Union[str, Any], params=None, *, batch: int = 2,
+                  seq_len: int = 16, n_batches: int = 2,
+                  seed: int = 0) -> Workload:
+    """Decoder LM loss/perplexity on deterministic synthetic token
+    batches: ``perplexity`` (minimize, primary) = exp(mean CE loss),
+    plus the raw ``loss``.  An untrained tiny config still yields a
+    meaningful *relative* axis — approximation error moves the loss."""
+    import jax
+    import jax.numpy as jnp
+
+    cfg, params, fns = _lm_setup(cfg, params, seed)
+    batches = _lm_token_batches(cfg, batch, seq_len, n_batches, seed)
+
+    def traceable_metrics(policy):
+        losses = [fns.forward_train(params, b, cfg, policy)
+                  for b in batches]
+        loss = jnp.mean(jnp.stack(losses))
+        return {"perplexity": jnp.exp(loss), "loss": loss}
+
+    def fn(policy):
+        out = jax.jit(lambda: traceable_metrics(policy))()
+        return {k: float(v) for k, v in out.items()}
+
+    return Workload(name=f"lm_perplexity[{cfg.name}]", fn=fn,
+                    metrics=("perplexity", "loss"), primary="perplexity",
+                    traceable_metrics=traceable_metrics,
+                    directions={"perplexity": "min", "loss": "min"},
+                    layer_counts=lm_layer_mult_counts(cfg, batch,
+                                                      seq_len))

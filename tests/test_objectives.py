@@ -1,0 +1,377 @@
+"""Objective registry + N-d Pareto + declarative select (DESIGN.md
+§2.7): the 2-d default must be bit-identical to the pre-§2.7 sweep,
+N-d fronts must be non-dominated and axis-order invariant, and
+``select`` must reproduce ``select_multiplier`` declaratively."""
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.approx.dse import (DesignPoint, ExploreResult, pareto_points,
+                              select_multiplier)
+from repro.approx.objectives import (AtLeast, AtMost, MaxDrop, Objective,
+                                     UnknownObjectiveError,
+                                     available_objectives,
+                                     ensure_objective, get_objective,
+                                     select, value_of)
+from repro.approx.objectives import pareto_points as pareto_nd
+
+RNG = np.random.default_rng(42)
+
+
+def _legacy_pareto_2d(points):
+    """The pre-§2.7 (accuracy max, power min) sweep, verbatim — the
+    bit-identity reference for the generic N-d implementation."""
+    pts = sorted(points, key=lambda p: (p.network_rel_power, -p.accuracy))
+    front, best_acc, i = [], float("-inf"), 0
+    while i < len(pts):
+        j = i
+        power = pts[i].network_rel_power
+        while j < len(pts) and pts[j].network_rel_power == power:
+            j += 1
+        acc_max = pts[i].accuracy
+        if acc_max > best_acc:
+            front.extend(p for p in pts[i:j] if p.accuracy == acc_max)
+            best_acc = acc_max
+        i = j
+    return front
+
+
+def _random_points(n, seed, with_axes=False, ties=True):
+    rng = np.random.default_rng(seed)
+    pts = []
+    for k in range(n):
+        # quantized values so exact ties (the old sweep's subtlest
+        # branch) actually occur
+        acc = round(float(rng.integers(0, 8)) / 8.0, 6) if ties \
+            else float(rng.random())
+        power = round(float(rng.integers(1, 8)) / 8.0, 6) if ties \
+            else float(rng.random())
+        costs = ({"area": float(rng.integers(1, 5)) / 4.0,
+                  "delay": float(rng.integers(1, 5)) / 4.0}
+                 if with_axes else {})
+        pts.append(DesignPoint(f"m{k}", "all", acc, power, power, 1.0,
+                               costs=costs))
+    return pts
+
+
+def test_2d_default_bit_identical_to_legacy_sweep():
+    for seed in range(20):
+        pts = _random_points(24, seed)
+        new = pareto_points(pts)
+        old = _legacy_pareto_2d(pts)
+        # identical membership AND order, comparing object identity
+        assert [id(p) for p in new] == [id(p) for p in old], \
+            f"divergence at seed {seed}"
+
+
+def test_2d_known_front_and_ties():
+    pts = [DesignPoint("a", "all", 0.9, 1.0, 1.0, 1.0),
+           DesignPoint("b", "all", 0.8, 0.5, 0.5, 1.0),
+           DesignPoint("b2", "all", 0.8, 0.5, 0.5, 1.0),  # exact tie
+           DesignPoint("c", "all", 0.7, 0.6, 0.6, 1.0),   # dominated
+           DesignPoint("d", "all", 0.5, 0.2, 0.2, 1.0)]
+    assert [p.multiplier for p in pareto_points(pts)] \
+        == ["d", "b", "b2", "a"]
+
+
+def _dominates(vals_q, vals_p):
+    return all(a <= b for a, b in zip(vals_q, vals_p)) and \
+        any(a < b for a, b in zip(vals_q, vals_p))
+
+
+@pytest.mark.parametrize("axes", [("accuracy", "power"),
+                                  ("accuracy", "power", "delay"),
+                                  ("accuracy", "power", "area", "delay")])
+def test_nd_front_nondominated_invariant(axes):
+    """Every front member is non-dominated; every excluded point is
+    dominated by some front member."""
+    for seed in range(5):
+        pts = _random_points(20, seed, with_axes=True)
+        front = pareto_nd(pts, axes)
+        signs = [get_objective(a).sign for a in axes]
+
+        def sv(p):
+            return tuple(s * value_of(p, a) for s, a in zip(signs, axes))
+        front_ids = {id(p) for p in front}
+        for p in pts:
+            dominated = any(_dominates(sv(q), sv(p)) for q in pts
+                            if q is not p)
+            assert (id(p) in front_ids) == (not dominated)
+
+
+def test_nd_front_invariant_under_axis_permutation():
+    for seed in range(5):
+        pts = _random_points(18, seed, with_axes=True)
+        base = {id(p) for p in pareto_nd(pts, ("accuracy", "power",
+                                               "delay"))}
+        for perm in itertools.permutations(("accuracy", "power",
+                                            "delay")):
+            assert {id(p) for p in pareto_nd(pts, perm)} == base, perm
+
+
+def test_extra_axis_resolves_ties_only():
+    """Adding an axis can only change front membership through points
+    that TIE on every original axis (the extra axis then breaks the
+    tie); any point strictly inside the 2-d front stays excluded."""
+    pts = _random_points(30, 7, with_axes=True)
+    f2 = {id(p) for p in pareto_nd(pts, ("accuracy", "power"))}
+    f3 = {id(p) for p in pareto_nd(pts, ("accuracy", "power", "delay"))}
+    for p in pts:
+        if id(p) in f3 - f2:
+            # newly admitted: must tie some 2-d front point exactly
+            assert any(q.accuracy == p.accuracy
+                       and q.network_rel_power == p.network_rel_power
+                       for q in pts if id(q) in f2)
+        if id(p) in f2 - f3:
+            # newly excluded: only a tie broken by delay can do that
+            assert any(q.accuracy == p.accuracy
+                       and q.network_rel_power == p.network_rel_power
+                       and q.costs["delay"] < p.costs["delay"]
+                       for q in pts)
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+def test_unknown_objective_error_is_actionable():
+    with pytest.raises(UnknownObjectiveError) as e:
+        get_objective("no_such_axis")
+    assert "no_such_axis" in str(e.value)
+    assert "power" in str(e.value)            # lists known axes
+
+
+def test_ensure_objective_idempotent_and_conflict():
+    a = ensure_objective("test_only_axis", "min")
+    assert ensure_objective("test_only_axis", "min") is a
+    with pytest.raises(ValueError):
+        ensure_objective("test_only_axis", "max")
+    assert "test_only_axis" in available_objectives()
+
+
+def test_builtin_axes_directions():
+    assert get_objective("accuracy").direction == "max"
+    for axis in ("power", "area", "delay", "er", "mae", "wce"):
+        assert get_objective(axis).direction == "min"
+
+
+def test_value_of_prefers_measured_metrics_over_getters():
+    p = DesignPoint("m", "all", 0.9, 0.4, 0.4, 1.0,
+                    metrics={"accuracy": 0.8, "mae": 123.0},
+                    errors={"mae": 7.0})
+    assert value_of(p, "accuracy") == 0.8     # measured wins over alias
+    assert value_of(p, "mae") == 123.0        # ... and over errors dict
+    assert value_of(p, "power") == 0.4
+
+
+def test_accuracy_axis_refuses_to_alias_foreign_primary():
+    """A point measured by a non-classification workload must not
+    resolve the 'accuracy' axis off its scalar alias column (which
+    holds a min-direction primary like logit MAE) — the legacy default
+    front would silently keep the WORST-fidelity design."""
+    good = DesignPoint("good", "all", 0.01, 0.5, 0.5, 1.0,
+                       metrics={"logit_mae": 0.01})
+    bad = DesignPoint("bad", "all", 5.0, 0.5, 0.5, 1.0,
+                      metrics={"logit_mae": 5.0})
+    with pytest.raises(KeyError, match="logit_mae"):
+        value_of(good, "accuracy")
+    with pytest.raises(KeyError):
+        pareto_points([good, bad])        # legacy default objectives
+    # pre-§2.7 points (no metrics dict) keep the scalar fallback
+    legacy = DesignPoint("m", "all", 0.9, 0.5, 0.5, 1.0)
+    assert value_of(legacy, "accuracy") == 0.9
+
+
+def test_value_of_missing_axis_raises_with_context():
+    p = DesignPoint("m", "hetero", 0.9, 0.4, 0.4, 1.0)
+    with pytest.raises(KeyError):
+        value_of(p, "delay")
+    with pytest.raises(KeyError):
+        value_of(p, "wce")
+
+
+# ----------------------------------------------------------------------
+# Declarative select
+# ----------------------------------------------------------------------
+def _result():
+    pts = [DesignPoint("exact", "all", 0.90, 1.00, 1.00, 1.0,
+                       costs={"area": 1.0, "delay": 1.0}),
+           DesignPoint("cheap", "all", 0.89, 0.50, 0.50, 1.0,
+                       costs={"area": 0.6, "delay": 1.2}),
+           DesignPoint("cheapest", "all", 0.70, 0.20, 0.20, 1.0,
+                       costs={"area": 0.3, "delay": 0.9})]
+    return ExploreResult(baseline_accuracy=0.90, all_layers=pts,
+                         baseline_metrics={"accuracy": 0.90})
+
+
+def test_select_reproduces_select_multiplier():
+    result = _result()
+    for drop in (0.0, 0.02, 0.5):
+        legacy = select_multiplier(result, drop)
+        new = select(result, constraints={"accuracy": MaxDrop(drop)},
+                     minimize="power", axis="all_layers")
+        assert new is legacy
+    assert select(result, {"accuracy": MaxDrop(-1.0)},
+                  minimize="power", axis="all_layers") is None
+
+
+def test_select_with_cost_constraint_and_maximize():
+    result = _result()
+    # delay ceiling rules out "cheap"
+    p = select(result, constraints={"accuracy": MaxDrop(0.5),
+                                    "delay": AtMost(1.0)},
+               minimize="power", axis="all_layers")
+    assert p.multiplier == "cheapest"
+    # maximize accuracy under a power ceiling
+    p = select(result, constraints={"power": AtMost(0.6)},
+               maximize="accuracy", axis="all_layers")
+    assert p.multiplier == "cheap"
+    p = select(result, constraints={"accuracy": AtLeast(0.95)},
+               minimize="power", axis="all_layers")
+    assert p is None
+
+
+def test_select_requires_exactly_one_direction():
+    result = _result()
+    with pytest.raises(ValueError):
+        select(result, minimize="power", maximize="accuracy")
+    with pytest.raises(ValueError):
+        select(result)
+    with pytest.raises(UnknownObjectiveError):
+        select(result, constraints={"bogus": AtMost(1.0)},
+               minimize="power")
+
+
+def test_satisfies_maxdrop_without_result_raises_value_error():
+    """The bare-number shorthand (= MaxDrop) needs a baseline; calling
+    satisfies without the result must fail with a usable ValueError,
+    not an AttributeError on None."""
+    from repro.approx.objectives import satisfies
+    p = DesignPoint("m", "all", 0.9, 0.5, 0.5, 1.0)
+    with pytest.raises(ValueError, match="baseline"):
+        satisfies(p, "accuracy", 0.02)
+    with pytest.raises(ValueError, match="baseline"):
+        satisfies(p, "accuracy", MaxDrop(0.02))
+    # absolute constraints need no baseline
+    assert satisfies(p, "accuracy", AtLeast(0.8))
+    assert satisfies(p, "power", AtMost(0.6))
+
+
+def test_bare_number_constraint_is_maxdrop():
+    result = _result()
+    a = select(result, {"accuracy": 0.02}, minimize="power",
+               axis="all_layers")
+    b = select(result, {"accuracy": MaxDrop(0.02)}, minimize="power",
+               axis="all_layers")
+    assert a is b
+
+
+# ----------------------------------------------------------------------
+# Serialization symmetry (ExploreResult/DesignPoint round-trip)
+# ----------------------------------------------------------------------
+def test_design_point_json_round_trip():
+    from repro.approx.specs import BackendSpec
+    p = DesignPoint("mul8u_trunc6", "s1_b0_conv1", 0.87, 0.93, 0.6, 0.2,
+                    spec=BackendSpec(mode="lut",
+                                     multiplier="mul8u_trunc6"),
+                    errors={"mae": 12.0, "wce": 99.0},
+                    metrics={"accuracy": 0.87, "logit_mae": 0.01},
+                    costs={"area": 0.8, "delay": 1.1})
+    blob = json.dumps(p.to_dict(), sort_keys=True)
+    q = DesignPoint.from_dict(json.loads(blob))
+    assert q == p
+
+
+def test_hetero_design_point_round_trip_preserves_assignment_order():
+    assignment = {"conv2": "mul8u_trunc6", "conv1": "mul8u_exact"}
+    p = DesignPoint.from_assignment(assignment, 0.9, 0.7,
+                                    metrics={"accuracy": 0.9},
+                                    costs={"area": 0.7, "delay": 1.0})
+    q = DesignPoint.from_dict(json.loads(json.dumps(p.to_dict())))
+    assert q == p
+    assert [l for l, _ in q.assignment] == ["conv2", "conv1"]
+
+
+def test_explore_result_json_round_trip():
+    result = _result()
+    result.per_layer = [DesignPoint("m", "conv1", 0.8, 0.9, 0.5, 0.3)]
+    result.heterogeneous = [DesignPoint.from_assignment(
+        {"conv1": "mul8u_exact"}, 0.9, 0.95)]
+    result.selected = result.all_layers[1]
+    result.objectives = ("accuracy", "power", "delay")
+    blob = json.dumps(result.to_json_dict(), sort_keys=True)
+    back = ExploreResult.from_json_dict(json.loads(blob))
+    assert back.to_json_dict() == result.to_json_dict()
+    assert back.all_layers == result.all_layers
+    assert back.selected == result.selected
+    assert back.objectives == result.objectives
+    assert back.primary == result.primary
+
+
+def test_round_trip_restores_min_primary_direction():
+    """A restored min-primary exploration must keep its quality-bound
+    direction even in a process that never constructed the workload
+    (the metric axis is re-registered from the serialized
+    directions)."""
+    from repro.approx import objectives as obj_mod
+    name = "restore_only_metric"
+    ensure_objective(name, "min")
+    result = ExploreResult(
+        baseline_accuracy=0.006,
+        all_layers=[
+            DesignPoint("good", "all", 0.010, 0.9, 0.9, 1.0,
+                        metrics={name: 0.010}),
+            DesignPoint("terrible", "all", 0.500, 0.3, 0.3, 1.0,
+                        metrics={name: 0.500})],
+        baseline_metrics={name: 0.006},
+        objectives=(name, "power"), primary=name)
+    in_process = [p.multiplier for p in result.within(0.05)]
+    blob = json.dumps(result.to_json_dict())
+    # simulate a fresh process: the workload-registered axis is gone
+    del obj_mod._REGISTRY[name]
+    back = ExploreResult.from_json_dict(json.loads(blob))
+    assert get_objective(name).direction == "min"
+    assert [p.multiplier for p in back.within(0.05)] == in_process \
+        == ["good"]
+    assert [p.multiplier for p in back.pareto()] \
+        == [p.multiplier for p in result.pareto()]
+    del obj_mod._REGISTRY[name]
+
+
+def test_compose_assignments_min_direction_prefers_better_quality():
+    """Shortlist tie-break on equal predicted power must prefer BETTER
+    predicted quality in the primary's own direction — for a
+    min-primary, the LOWER predicted value."""
+    import numpy as np
+
+    from repro.approx.dse import compose_assignments
+    from repro.approx.resilience import LayerComponents
+
+    comp = LayerComponents(
+        layers=("a", "b"), multipliers=("m0", "m1"),
+        quality=np.array([[1.0, 1.3],     # layer a: m1 hurts by 0.3
+                          [1.0, 1.1]]),   # layer b: m1 hurts by 0.1
+        rel_power=np.array([1.0, 0.5]),
+        counts=(1, 1), total_count=2, baseline=1.0, direction="min")
+    rows = [tuple(r.tolist())
+            for r in compose_assignments(comp, top_k=4)]
+    # both power-0.75 assignments present; the lower-predicted-MAE one
+    # (m0@a, m1@b → drop 0.1) must sort before (m1@a, m0@b → drop 0.3)
+    assert rows.index((0, 1)) < rows.index((1, 0))
+
+
+def test_from_json_dict_accepts_pre_refactor_schema():
+    """Dicts written before §2.7 lack metrics/costs/objectives."""
+    old = {"baseline_accuracy": 0.9,
+           "all_layers": [{"multiplier": "m", "layer": "all",
+                           "accuracy": 0.8, "network_rel_power": 0.5,
+                           "multiplier_rel_power": 0.5,
+                           "mult_share": 1.0, "spec": None,
+                           "errors": {}, "assignment": None,
+                           "mode": "lut", "variant": "ref"}],
+           "per_layer": [], "heterogeneous": [], "selected": None}
+    back = ExploreResult.from_json_dict(old)
+    assert back.baseline_accuracy == 0.9
+    assert back.objectives == ("accuracy", "power")
+    assert back.all_layers[0].metrics == {}

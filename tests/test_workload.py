@@ -1,0 +1,273 @@
+"""Workload layer (DESIGN.md §2.7): as_workload normalization,
+classification parity with the legacy BankableEval path, and the LM
+adapters (fidelity + perplexity) on a tiny decoder config — including
+the objective-first ``explore(workload=..., objectives=...)`` endpoint
+returning a 3-axis front."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.dse import explore
+from repro.approx.layers import ApproxPolicy, EXACT_POLICY
+from repro.approx.objectives import get_objective, value_of
+from repro.approx.resilience import BankableEval, all_layers_sweep
+from repro.approx.specs import BackendSpec
+from repro.approx.workload import (Workload, as_workload, classification,
+                                   lm_fidelity, lm_layer_mult_counts,
+                                   lm_perplexity, logit_fidelity)
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+from repro.models.common import LMConfig
+
+LAYER_COUNTS = {"layer_a": 100, "layer_b": 300}
+MULTS = ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc3"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 5):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LMConfig(name="tiny-dense", family="dense", n_layers=2,
+                    d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab=128, head_dim=16, dtype=jnp.float32,
+                    remat=False, loss_chunk=16)
+
+
+# ----------------------------------------------------------------------
+# Normalization shims
+# ----------------------------------------------------------------------
+def test_as_workload_plain_callable():
+    wl = as_workload(lambda policy: 0.5)
+    assert isinstance(wl, Workload)
+    assert wl.metrics == ("accuracy",) and wl.primary == "accuracy"
+    assert wl.traceable is None and wl.traceable_metrics is None
+    assert wl(EXACT_POLICY) == 0.5
+    assert wl.measure(EXACT_POLICY) == {"accuracy": 0.5}
+
+
+def test_as_workload_bankable_eval_preserves_traceable():
+    be = BankableEval(fn=lambda p: 0.25,
+                      traceable=lambda p: jnp.float32(0.25))
+    wl = as_workload(be)
+    assert wl.metrics == ("accuracy",)
+    assert float(wl.traceable(EXACT_POLICY)) == 0.25
+    assert wl.traceable_metrics(EXACT_POLICY)["accuracy"] == 0.25
+
+
+def test_as_workload_is_identity_on_workloads():
+    wl = Workload(name="w", fn=lambda p: {"m": 1.0}, metrics=("m",))
+    assert as_workload(wl) is wl
+
+
+def test_workload_primary_validation_and_registration():
+    with pytest.raises(ValueError):
+        Workload(name="w", fn=lambda p: {}, metrics=())
+    with pytest.raises(ValueError):
+        Workload(name="w", fn=lambda p: {"m": 1.0}, metrics=("m",),
+                 primary="other")
+    Workload(name="w", fn=lambda p: {"wl_test_axis": 1.0},
+             metrics=("wl_test_axis",),
+             directions={"wl_test_axis": "min"})
+    assert get_objective("wl_test_axis").direction == "min"
+
+
+def test_workload_cached_hits_policy_cache():
+    calls = [0]
+
+    def fn(policy):
+        calls[0] += 1
+        return {"accuracy": 0.5}
+
+    cache: dict = {}
+    wl = Workload(name="w", fn=fn, metrics=("accuracy",)).cached(cache)
+    policy = ApproxPolicy(default=BackendSpec.golden())
+    assert wl.measure(policy) == {"accuracy": 0.5}
+    assert wl.measure(policy) == {"accuracy": 0.5}
+    assert calls[0] == 1 and len(cache) == 1
+
+
+# ----------------------------------------------------------------------
+# Sweep parity: Workload vs legacy scalar eval
+# ----------------------------------------------------------------------
+def test_sweep_rows_carry_metric_dicts_and_costs(lib):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+
+    def eval_fn(policy):
+        err = float(np.abs(np.asarray(
+            policy.matmul("layer_a", x, w)) - ref).mean())
+        return 1.0 / (1.0 + err)
+
+    rows_legacy = all_layers_sweep(eval_fn, LAYER_COUNTS, MULTS, lib,
+                                   mode="lut")
+    wl = Workload(name="toy",
+                  fn=lambda p: {"accuracy": eval_fn(p)},
+                  metrics=("accuracy",))
+    rows_wl = all_layers_sweep(wl, LAYER_COUNTS, MULTS, lib, mode="lut")
+    for a, b in zip(rows_legacy, rows_wl):
+        assert a.accuracy == b.accuracy == b.metrics["accuracy"]
+        assert a.metrics == {"accuracy": a.accuracy}
+        # cost axes threaded onto every row, exact circuit at 1.0
+        assert set(a.costs) == {"area", "delay"}
+    exact_row = next(r for r in rows_wl if r.multiplier == "mul8u_exact")
+    assert exact_row.costs["area"] == pytest.approx(1.0)
+    assert exact_row.costs["delay"] == pytest.approx(1.0)
+
+
+def test_cost_axes_map_synthesizes_missing_width_reference(lib):
+    """A width with no mul{W}u_exact library entry (composed 16-bit in
+    a tiny library) must still land on the RELATIVE scale — reference
+    synthesized from an exact array multiplier, never raw ps/um2 mixed
+    with ~1.0 ratios."""
+    from repro.approx.power import cost_axes_map
+    wide = lib.add_composed("mul8u_exact", 16, "loa4").name
+    cmap = cost_axes_map(lib, ["mul8u_exact", "mul8u_trunc6", wide])
+    assert cmap["mul8u_exact"]["delay"] == pytest.approx(1.0)
+    # relative, same order of magnitude as the 8-bit ratios — a raw
+    # 45nm delay would be hundreds of picoseconds
+    for axis in ("area", "delay"):
+        assert 0.0 < cmap[wide][axis] < 20.0
+
+
+# ----------------------------------------------------------------------
+# Shipped adapters
+# ----------------------------------------------------------------------
+def test_classification_workload_matches_direct_eval():
+    from repro.models import resnet
+    cfg = resnet.resnet_config(8)
+    params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+    wl = classification(cfg, params, eval_n=32, batch=32)
+    assert wl.metrics == ("accuracy",) and wl.primary == "accuracy"
+    assert wl.layer_counts == resnet.layer_mult_counts(cfg)
+    acc = wl.measure(EXACT_POLICY)["accuracy"]
+    assert 0.0 <= acc <= 1.0
+    # scalar shim + traceable projection agree
+    assert wl(EXACT_POLICY) == acc
+    assert float(jax.jit(
+        lambda: wl.traceable(EXACT_POLICY))()) == acc
+
+
+def test_logit_fidelity_exact_policy_is_perfect():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(8, 5)), jnp.float32)
+    batches = [jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+               for _ in range(2)]
+
+    def forward(policy, x):
+        return policy.matmul("proj", x, w)
+
+    wl = logit_fidelity(forward, batches)
+    m = wl.measure(EXACT_POLICY)
+    # the reference is computed eagerly, the measurement under jit —
+    # fusion differences leave float-ulp residue, not exact zero
+    assert m["logit_mae"] < 1e-5
+    assert m["top1_agreement"] == 1.0
+    assert wl.primary == "logit_mae"
+    assert get_objective("logit_mae").direction == "min"
+    assert get_objective("top1_agreement").direction == "max"
+
+
+def test_lm_fidelity_on_tiny_decoder(tiny_cfg, lib):
+    wl = lm_fidelity(tiny_cfg, batch=2, seq_len=8, n_batches=1)
+    assert wl.metrics == ("logit_mae", "top1_agreement")
+    assert set(wl.layer_counts) == {"attn.wq", "attn.wk", "attn.wv",
+                                    "attn.wo", "ffn.wi", "ffn.wg",
+                                    "ffn.wo"}
+    exact = wl.measure(EXACT_POLICY)
+    assert exact["logit_mae"] < 1e-5 and exact["top1_agreement"] == 1.0
+    # an aggressive truncation must hurt fidelity measurably
+    rough = wl.measure(ApproxPolicy(default=BackendSpec.from_library(
+        "mul8u_trunc3", mode="lut")).materialize(lib))
+    golden = wl.measure(ApproxPolicy(
+        default=BackendSpec.golden()).materialize(lib))
+    assert rough["logit_mae"] > golden["logit_mae"] >= 0.0
+
+
+def test_lm_perplexity_on_tiny_decoder(tiny_cfg):
+    wl = lm_perplexity(tiny_cfg, batch=2, seq_len=8, n_batches=1)
+    m = wl.measure(EXACT_POLICY)
+    assert m["perplexity"] == pytest.approx(float(np.exp(m["loss"])),
+                                            rel=1e-6)
+    assert m["perplexity"] > 1.0
+    assert wl.primary_direction == "min"
+
+
+def test_lm_adapter_rejects_encdec():
+    with pytest.raises(ValueError, match="decoder-family"):
+        lm_fidelity(LMConfig(name="w", family="encdec", n_layers=2,
+                             d_model=32, n_heads=2, n_kv_heads=2,
+                             d_ff=64, vocab=128))
+
+
+def test_lm_layer_mult_counts_scale_with_layers(tiny_cfg):
+    c1 = lm_layer_mult_counts(tiny_cfg, batch=2, seq_len=8)
+    import dataclasses
+    c2 = lm_layer_mult_counts(
+        dataclasses.replace(tiny_cfg, n_layers=4), batch=2, seq_len=8)
+    assert all(c2[k] == 2 * c1[k] for k in c1)
+
+
+# ----------------------------------------------------------------------
+# Objective-first explore() (the acceptance-criteria endpoint)
+# ----------------------------------------------------------------------
+def test_explore_workload_objectives_three_axis_front(tiny_cfg, lib):
+    wl = lm_fidelity(tiny_cfg, batch=2, seq_len=8, n_batches=1)
+    result = explore(workload=wl, library=lib, multipliers=MULTS,
+                     mode="lut", per_layer=False,
+                     objectives=("logit_mae", "power", "delay"))
+    assert result.primary == "logit_mae"
+    assert result.objectives == ("logit_mae", "power", "delay")
+    assert result.baseline_metrics.keys() == {"logit_mae",
+                                              "top1_agreement"}
+    assert len(result.all_layers) == len(MULTS)
+    for p in result.all_layers:
+        assert set(p.metrics) == {"logit_mae", "top1_agreement"}
+        assert set(p.costs) == {"area", "delay"}
+    front = result.pareto()
+    assert 0 < len(front) <= len(MULTS)
+    # the front is non-dominated over all three axes
+    for p in front:
+        for q in result.all_layers:
+            assert not (
+                value_of(q, "logit_mae") <= value_of(p, "logit_mae")
+                and value_of(q, "power") <= value_of(p, "power")
+                and value_of(q, "delay") <= value_of(p, "delay")
+                and (value_of(q, "logit_mae") < value_of(p, "logit_mae")
+                     or value_of(q, "power") < value_of(p, "power")
+                     or value_of(q, "delay") < value_of(p, "delay")))
+    # exact tile has the best fidelity, so it must be on the front
+    assert any(p.multiplier == "mul8u_exact" for p in front)
+
+
+def test_explore_workload_layer_counts_defaulted(lib):
+    calls = [0]
+
+    def fn(policy):
+        calls[0] += 1
+        return {"accuracy": 0.5}
+
+    wl = Workload(name="w", fn=fn, metrics=("accuracy",),
+                  layer_counts={"layer_a": 10})
+    result = explore(workload=wl, library=lib, multipliers=MULTS,
+                     mode="lut")
+    assert len(result.per_layer) == len(MULTS)
+    assert result.baseline_metrics == {"accuracy": 0.5}
+
+
+def test_explore_requires_some_eval():
+    with pytest.raises(TypeError):
+        explore(layer_counts={"a": 1})
