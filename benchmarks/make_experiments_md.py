@@ -258,6 +258,40 @@ def objectives_table() -> str:
     return "\n".join(rows)
 
 
+SERVE_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_serve.json")
+
+
+def serve_table() -> str:
+    """Continuous-batching serve load from BENCH_serve.json (written by
+    `python -m benchmarks.serve_load`)."""
+    if not os.path.exists(SERVE_PATH):
+        return "(run `python -m benchmarks.serve_load` first)"
+    with open(SERVE_PATH) as f:
+        r = json.load(f)
+    rows = [f"`{r['arch']}` (reduced), {r['n_slots']} slots, "
+            f"{len(r['multiplier_bank'])}-multiplier fixed bank"
+            f"{' (quick)' if r.get('quick') else ''}.  Poisson "
+            "arrivals; each level draws request policies from that "
+            "many distinct tenant accelerator selections (uniform + "
+            "one heterogeneous per-layer policy at ≥4).", "",
+            "| concurrent policies | requests | tok/s | p50 ms | "
+            "p99 ms | decode steps | decode traces |",
+            "|---|---|---|---|---|---|---|"]
+    for lv in r.get("levels", []):
+        rows.append(
+            f"| {lv['n_policies']} | {lv['n_requests']} "
+            f"| {lv['tokens_per_s']} | {lv['p50_ms']} | {lv['p99_ms']} "
+            f"| {lv['decode_steps']} "
+            f"| {lv['trace_counts']['decode']} |")
+    rows += ["", f"O(1)-programs gate (decode traces stay at 1 across "
+             f"all levels): **{r['trace_gate_o1_programs']}**.  "
+             f"Bit-identity vs per-request sequential `generate` over "
+             f"{r['bit_identity_requests']} requests: "
+             f"**{r['bit_identity']}**."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -278,6 +312,7 @@ def main() -> None:
     text = replace_section(text, "HETERO", hetero_table())
     text = replace_section(text, "WIDE", wide_table())
     text = replace_section(text, "OBJECTIVES", objectives_table())
+    text = replace_section(text, "SERVE", serve_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

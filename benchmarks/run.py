@@ -29,15 +29,25 @@ SUITES = {
     "kernels": ("benchmarks.kernel_bench", "kernel micro-benchmarks"),
     "rank": ("benchmarks.rank_analysis", "LUT low-rank analysis"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
+    "serve": ("benchmarks.serve_load",
+              "continuous-batching serve load (BENCH_serve.json)"),
 }
+
+# module-name aliases: every suite is addressable by its module's
+# basename too (--only kernel_bench == --only kernels); aliases resolve
+# to the canonical key so a default run never executes a suite twice.
+ALIASES = {mod.split(".")[-1]: key for key, (mod, _) in SUITES.items()}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated suite names")
+                    help="comma-separated suite names (canonical keys "
+                         f"{list(SUITES)} or module-name aliases "
+                         f"{sorted(set(ALIASES) - set(SUITES))})")
     args = ap.parse_args()
     todo = (args.only.split(",") if args.only else list(SUITES))
+    todo = list(dict.fromkeys(ALIASES.get(k, k) for k in todo))
 
     print("name,us_per_call,derived")
     failed = []

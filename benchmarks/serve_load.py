@@ -1,0 +1,233 @@
+"""Continuous-batching serve load generator (DESIGN.md §2.8).
+
+Drives the multi-tenant ``ContinuousEngine`` with Poisson request
+arrivals whose ``ServeConfig`` policies are drawn from a mixed
+distribution of approximate-multiplier selections (uniform per-tenant
+picks plus, at higher concurrency, a heterogeneous per-layer policy —
+the autoAx deployment story: every application ships its own selected
+accelerator).  Writes ``benchmarks/results/BENCH_serve.json``:
+
+  * per concurrency level (1/2/4[/8] distinct in-flight policies):
+    tokens/s, p50/p99 request latency, decode-step count, and the
+    engine's cumulative trace counts;
+  * the **O(1)-programs gate**: total decode traces across the whole
+    sweep must not grow with the number of distinct policies (the bank
+    is fixed up front, so exactly ONE decode program serves every
+    level);
+  * the **bit-identity gate**: every request's continuous-batched
+    token stream must equal per-request sequential ``Engine.generate``
+    under the equivalent materialized policy, token for token.
+
+The run exits non-zero when either gate fails (the CI ``bench-serve``
+job's failure condition).  ``--quick`` shrinks request counts and
+levels; gates are identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.approx.layers import ApproxPolicy
+from repro.approx.specs import BackendSpec
+from repro.configs import get_config
+from repro.core.library import get_default_library
+from repro.models.registry import input_extras, model_fns
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+from .common import emit
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_serve.json")
+
+MULTIPLIERS = ["mul8u_exact", "mul8u_trunc7", "mul8u_trunc6",
+               "mul8u_trunc5", "mul8u_bam_h0_v4", "mul8u_bam_h1_v4",
+               "mul8u_trunc4", "mul8u_bam_h0_v2"]
+PROMPT_LENS = (4, 6, 8)                 # fixed set -> bounded prefill traces
+
+
+def _uniform_policy(mult: str) -> str:
+    return ApproxPolicy(default=BackendSpec(
+        mode="lut", multiplier=mult, ste=False)).to_json()
+
+
+def _hetero_policy(attn_mult: str, rest_mult: str) -> str:
+    """Different multiplier on attention vs everything else — one
+    request carrying a per-layer (explore_heterogeneous-style)
+    selection."""
+    return ApproxPolicy(
+        default=BackendSpec(mode="lut", multiplier=rest_mult, ste=False),
+        overrides=[("*attn*", BackendSpec(mode="lut",
+                                          multiplier=attn_mult,
+                                          ste=False))]).to_json()
+
+
+def _policy_set(n: int) -> list:
+    """n distinct policies: None (engine default) + uniform picks, the
+    last replaced by a heterogeneous per-layer policy when n >= 4."""
+    policies: list = [None]
+    policies += [_uniform_policy(m) for m in MULTIPLIERS[1:n]]
+    if n >= 4:
+        policies[-1] = _hetero_policy(MULTIPLIERS[1], MULTIPLIERS[2])
+    return policies[:n]
+
+
+def _drive(engine, requests, mean_interarrival_steps: float, seed: int
+           ) -> dict:
+    """Submit ``requests`` (prompt, ServeConfig) on a Poisson arrival
+    process measured in decode-step units and run the engine dry."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival_steps, len(requests))
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    start_step = engine.step_count
+    rids, i = [], 0
+    t0 = time.perf_counter()
+    while i < len(requests) or not engine.scheduler.idle:
+        while i < len(requests) and \
+                engine.step_count - start_step >= arrivals[i]:
+            prompt, serve = requests[i]
+            rids.append(engine.submit(prompt, serve))
+            i += 1
+        engine.step()
+        if engine.step_count - start_step > 100_000:
+            raise RuntimeError("load did not drain")
+    wall = time.perf_counter() - t0
+    finished = engine.scheduler.finished
+    lat_ms = [(finished[r].finished_at - finished[r].submitted_at) * 1e3
+              for r in rids]
+    n_tokens = sum(len(finished[r].tokens) for r in rids)
+    return {"rids": rids, "wall_s": wall, "n_tokens": n_tokens,
+            "steps": engine.step_count - start_step,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99))}
+
+
+def _make_requests(n_requests: int, policies: list, vocab: int,
+                   seed: int) -> list:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        prompt = rng.integers(
+            0, vocab, (int(rng.choice(PROMPT_LENS)),)).astype(np.int32)
+        temp = 0.0 if i % 2 == 0 else 0.8
+        serve = ServeConfig(
+            max_new_tokens=int(rng.integers(3, 8)), temperature=temp,
+            seed=int(rng.integers(0, 1 << 16)),
+            policy=policies[i % len(policies)])
+        reqs.append((prompt, serve))
+    return reqs
+
+
+def run(quick: bool = False, arch: str = "qwen1.5-0.5b") -> dict:
+    lib = get_default_library()
+    cfg = get_config(arch).reduced()
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0), cfg)
+
+    levels = [1, 2, 4] if quick else [1, 2, 4, 8]
+    n_requests = 8 if quick else 24
+    # ONE engine, bank fixed to the multiplier superset: every level
+    # (and every distinct-policy count) must reuse the same compiled
+    # decode program — the O(1) gate measures exactly this.
+    engine = ContinuousEngine(cfg, params, library=lib,
+                              multipliers=MULTIPLIERS, n_slots=4,
+                              capacity=max(PROMPT_LENS) + 8,
+                              block_size=4)
+
+    # warmup: compile the decode step and one prefill per prompt length
+    for plen in PROMPT_LENS:
+        engine.submit(np.zeros(plen, np.int32),
+                      ServeConfig(max_new_tokens=2))
+    engine.run()
+    warm_traces = dict(engine.trace_counts)
+
+    results, all_reqs = [], []
+    for n_pol in levels:
+        reqs = _make_requests(n_requests, _policy_set(n_pol), cfg.vocab,
+                              seed=100 + n_pol)
+        stats = _drive(engine, reqs, mean_interarrival_steps=2.0,
+                       seed=200 + n_pol)
+        all_reqs.extend(zip(stats.pop("rids"), reqs))
+        level = {"n_policies": n_pol, "n_requests": n_requests,
+                 "tokens_per_s": round(stats["n_tokens"]
+                                       / stats["wall_s"], 1),
+                 "p50_ms": round(stats["p50_ms"], 2),
+                 "p99_ms": round(stats["p99_ms"], 2),
+                 "decode_steps": stats["steps"],
+                 "trace_counts": dict(engine.trace_counts)}
+        results.append(level)
+        emit(f"serve/policies_{n_pol}",
+             stats["wall_s"] / max(stats["steps"], 1) * 1e6,
+             f"tok_s={level['tokens_per_s']} p50_ms={level['p50_ms']} "
+             f"p99_ms={level['p99_ms']}")
+
+    # O(1)-programs gate: decode trace count did not grow after warmup
+    trace_gate = (engine.trace_counts["decode"]
+                  == warm_traces["decode"] == 1)
+
+    # bit-identity gate: replay every request sequentially under the
+    # equivalent materialized policy
+    ref_engines: dict = {}
+    finished = engine.scheduler.finished
+    bit_identity = True
+    mismatches = []
+    extras = input_extras(cfg, 1) or None
+    for rid, (prompt, serve) in all_reqs:
+        key = serve.policy if isinstance(serve.policy, str) \
+            else json.dumps(serve.policy, sort_keys=True) \
+            if serve.policy else None
+        if key not in ref_engines:
+            ref_engines[key] = Engine(cfg, params,
+                                      engine.lane_policy(serve),
+                                      library=lib)
+        ref = ref_engines[key].generate(prompt[None], serve,
+                                        extras=extras)[0]
+        got = np.asarray(finished[rid].tokens, np.int32)
+        if not np.array_equal(ref, got):
+            bit_identity = False
+            mismatches.append({"rid": rid, "got": got.tolist(),
+                               "ref": ref.tolist()})
+
+    record = {
+        "arch": arch, "quick": quick, "n_slots": 4,
+        "multiplier_bank": MULTIPLIERS,
+        "levels": results,
+        "warmup_traces": warm_traces,
+        "final_traces": dict(engine.trace_counts),
+        "trace_gate_o1_programs": trace_gate,
+        "bit_identity": bit_identity,
+        "bit_identity_requests": len(all_reqs),
+        "mismatches": mismatches[:5],
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("serve/bit_identity", 0.0, str(bit_identity))
+    emit("serve/trace_gate", 0.0, str(trace_gate))
+
+    # record is written first so CI failures still upload the artifact
+    if not bit_identity:
+        raise SystemExit(
+            "continuous-batched mixed-policy decode diverged from "
+            f"sequential generate on {len(mismatches)} request(s) "
+            f"(see {BENCH_PATH})")
+    if not trace_gate:
+        raise SystemExit(
+            "decode trace count grew with concurrent-policy count — "
+            f"the O(1)-compiled-programs contract is broken "
+            f"(see {BENCH_PATH})")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small request counts / levels (CI); gates "
+                         "are identical")
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+    run(quick=args.quick, arch=args.arch)

@@ -251,6 +251,36 @@ def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
     return jax.jit(jax.vmap(lane))(luts)
 
 
+def bank_assignment_overrides(bank: LutBank, luts, assign_row, layers,
+                              *, mode: str = "lut", variant: str = "ref",
+                              lane_bits=None, lane_masks=None
+                              ) -> list[tuple[str, MaterializedBackend]]:
+    """Traced per-layer policy overrides for ONE lane of a banked
+    program: layer ``layers[j]`` runs a backend whose LUT const is the
+    gathered slice ``luts[assign_row[j]]``.  ``luts`` / ``assign_row``
+    (and, for width-generic banks, ``lane_bits`` / ``lane_masks``) are
+    traced arrays; ``bank`` supplies only static metadata (block_m,
+    any_wide, reduce).  Shared by ``policy_bank_eval`` (one vmap lane
+    per candidate policy) and the continuous-batching serve engine
+    (one vmap lane per request slot) — both get O(1) compiled programs
+    regardless of how many distinct assignments are in flight."""
+    overrides = []
+    for j, layer in enumerate(layers):
+        lut = jnp.take(luts, assign_row[j], axis=0)       # (256,256)
+        if bank.any_wide:
+            # width-generic: each layer gathers its multiplier's
+            # quantization width + product mask alongside the tile LUT
+            # (DESIGN.md §2.6)
+            mb = _bank_lane_backend(
+                lut, bank, mode, variant,
+                mask=jnp.take(lane_masks, assign_row[j]),
+                bits=jnp.take(lane_bits, assign_row[j]))
+        else:
+            mb = _bank_lane_backend(lut, bank, mode, variant)
+        overrides.append((layer, mb))
+    return overrides
+
+
 def policy_for_lane(pbank: PolicyBank, p: int, *, mode: str = "lut",
                     variant: str = "ref",
                     base: Optional[BackendLike] = None) -> ApproxPolicy:
@@ -310,20 +340,11 @@ def policy_bank_eval(fn, pbank: PolicyBank, *, mode: str = "lut",
     bank_masks = jnp.asarray(pbank.bank.lane_masks, jnp.uint32)
 
     def lane(assign_row):
-        overrides = []
-        for j, layer in enumerate(pbank.layers):
-            lut = jnp.take(luts, assign_row[j], axis=0)   # (256,256)
-            if any_wide:
-                # width-generic: each layer gathers its multiplier's
-                # quantization width + product mask alongside the
-                # tile LUT (DESIGN.md §2.6)
-                mb = _bank_lane_backend(
-                    lut, pbank.bank, mode, variant,
-                    mask=jnp.take(bank_masks, assign_row[j]),
-                    bits=jnp.take(bank_bits, assign_row[j]))
-            else:
-                mb = _bank_lane_backend(lut, pbank.bank, mode, variant)
-            overrides.append((layer, mb))
+        overrides = bank_assignment_overrides(
+            pbank.bank, luts, assign_row, pbank.layers,
+            mode=mode, variant=variant,
+            lane_bits=bank_bits if any_wide else None,
+            lane_masks=bank_masks if any_wide else None)
         policy = ApproxPolicy(default=base, overrides=overrides)
         return fn(policy)
 

@@ -474,6 +474,52 @@ class PolicyBank:
             [{l: n for l in layers} for n in names],
             library=library, layers=layers, block_m=block_m)
 
+    @staticmethod
+    def from_policies(policies, layers, library=None,
+                      block_m: int = 512, mode: str = "lut"
+                      ) -> "PolicyBank":
+        """Bank assembly from *request* policies (DESIGN.md §2.8): each
+        ``ApproxPolicy`` is resolved over ``layers`` via
+        ``policy_assignment`` (fnmatch semantics, so uniform and
+        partially-overridden policies both work), the distinct
+        multiplier names deduplicate into one shared ``LutBank``, and
+        row ``p`` of the result is policy ``p``'s per-layer lane
+        assignment — the serve engine's request→lane mapping."""
+        assignments = [policy_assignment(p, layers, mode=mode,
+                                         block_m=block_m)
+                       for p in policies]
+        return PolicyBank.from_assignments(assignments, library=library,
+                                           layers=tuple(layers),
+                                           block_m=block_m)
+
+
+def policy_assignment(policy, layers, *, mode: str = "lut",
+                      block_m: int = 512) -> dict[str, str]:
+    """Resolve an ``ApproxPolicy`` to a layer-tag → multiplier-name
+    mapping over ``layers`` — the per-request half of serve-time bank
+    assembly.  Every layer must resolve to a banked ``mode`` spec with
+    the bank's ``block_m``; anything else (an f32 default, a lowrank
+    override, a mismatched blocking) cannot ride a LUT-bank lane and
+    raises with the offending layer named."""
+    from .layers import spec_of   # runtime import: layers imports us
+    out: dict[str, str] = {}
+    for layer in layers:
+        spec = spec_of(policy.backend_for(layer))
+        if spec.mode != mode:
+            raise ValueError(
+                f"policy resolves layer {layer!r} to mode "
+                f"{spec.mode!r}; mixed-policy serving batches every "
+                f"request through the banked {mode!r} datapath — "
+                f"express the request as a {mode!r}-mode policy "
+                "(multiplier='mul8u_exact' emulates the exact product)")
+        if spec.block_m != block_m:
+            raise ValueError(
+                f"policy resolves layer {layer!r} with block_m="
+                f"{spec.block_m}, but the shared bank blocks at "
+                f"{block_m} — one banked program compiles one blocking")
+        out[layer] = spec.multiplier
+    return out
+
 
 _BANK_CACHE: "OrderedDict[tuple, LutBank]" = OrderedDict()
 _BANK_CACHE_MAX = 16

@@ -269,6 +269,33 @@ def lane_sharding(bank_sh: NamedSharding) -> NamedSharding:
     return NamedSharding(bank_sh.mesh, P(lead))
 
 
+def slot_sharding(n_slots: int, mesh: Optional[Mesh] = None,
+                  axis: str = "sweep") -> NamedSharding:
+    """Sharding for the continuous-batching engine's *slot* (request
+    lane) axis — the leading dim of its per-slot state (tokens,
+    lengths, assignment rows, dense cache store).  Pass as
+    ``ContinuousEngine(..., sharding=...)``: the LUT bank and block
+    pools stay replicated (every lane gathers from them) while the
+    slot axis — and therefore the whole vmapped mixed-policy decode
+    step — splits across devices, each decoding
+    ``n_slots / n_devices`` in-flight requests.  Same divisibility
+    policy as ``bank_sharding``: non-divisible counts replicate."""
+    mesh = mesh if mesh is not None else sweep_mesh()
+    return NamedSharding(mesh, bank_pspec(n_slots, mesh, axis))
+
+
+def leading_axis_sharding(sharding: NamedSharding,
+                          rank: int) -> NamedSharding:
+    """Extend a 1-D (leading-axis) sharding to a rank-``rank`` leaf:
+    same mesh and leading spec, trailing dims replicated.  Used by the
+    serve engine to place each per-slot state leaf — (n_slots,),
+    (n_slots, n_layers), (n_slots, *cache_dims) — consistently from
+    one ``slot_sharding``."""
+    lead = sharding.spec[0] if len(sharding.spec) else None
+    return NamedSharding(sharding.mesh,
+                         P(*([lead] + [None] * (rank - 1))))
+
+
 def policy_sharding(n_policies: int, mesh: Optional[Mesh] = None,
                     axis: str = "sweep") -> NamedSharding:
     """Sharding for the heterogeneous engine's *policy* axis — the

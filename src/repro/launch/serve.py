@@ -3,6 +3,16 @@ datapath.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --reduced --mode lowrank --multiplier auto
+
+``--continuous`` runs the same workload through the multi-tenant
+``ContinuousEngine`` (paged KV + mixed-policy banked decode,
+DESIGN.md §2.8) instead of one static batch.
+
+Throughput reporting separates compile from steady state: a warmup
+``generate`` (same shapes) triggers all prefill/decode traces first,
+then the timed run reports steady-state decode tok/s alongside the
+end-to-end time (which on the first-ever call would be compile-bound
+and meaningless as a throughput number).
 """
 from __future__ import annotations
 
@@ -14,8 +24,8 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.launch.steps import serve_policy, train_policy
-from repro.models.registry import model_fns
-from repro.serve.engine import Engine, ServeConfig
+from repro.models.registry import input_extras, model_fns
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
 
 
 def main() -> None:
@@ -32,6 +42,12 @@ def main() -> None:
     ap.add_argument("--policy-json", default=None,
                     help="path to a serialized ApproxPolicy (overrides "
                          "--mode/--multiplier/--rank)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching "
+                         "mixed-policy engine (forces --mode lut)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the compile warmup (end-to-end time "
+                         "then includes tracing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,6 +55,16 @@ def main() -> None:
         cfg = cfg.reduced()
     fns = model_fns(cfg)
     params = fns.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extras = input_extras(cfg, args.batch) or None
+
+    if args.continuous:
+        _serve_continuous(cfg, params, prompts, args)
+        return
+
     if args.policy_json:
         import json
         from repro.approx.layers import ApproxPolicy
@@ -48,25 +74,64 @@ def main() -> None:
         policy = (train_policy() if args.mode == "bf16"
                   else serve_policy(args.multiplier, args.mode, args.rank))
     engine = Engine(cfg, params, policy)
+    serve_cfg = ServeConfig(max_new_tokens=args.max_new)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    extras = {}
-    if cfg.family == "encdec":
-        extras["frames"] = np.full(
-            (args.batch, cfg.enc_frames, cfg.d_model), 0.1, np.float32)
-    if cfg.family == "vlm":
-        extras["img_embeds"] = np.full(
-            (args.batch, cfg.n_img_tokens, cfg.d_model), 0.1, np.float32)
+    if not args.no_warmup:
+        # warmup: same shapes -> all prefill/decode traces compile here
+        # (both cache lengths: the timed run's and the prefill-only's)
+        t0 = time.time()
+        engine.generate(prompts, serve_cfg, extras=extras)
+        engine.generate(prompts, ServeConfig(max_new_tokens=1),
+                        extras=extras)
+        print(f"[serve] warmup (compile) {time.time() - t0:.2f}s")
+
     t0 = time.time()
-    out = engine.generate(prompts, ServeConfig(max_new_tokens=args.max_new),
-                          extras=extras or None)
-    dt = time.time() - t0
-    print(f"[serve] {args.arch} mode={args.mode} generated "
-          f"{out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s)")
+    out = engine.generate(prompts, serve_cfg, extras=extras)
+    e2e = time.time() - t0
+    # steady-state decode rate: subtract the prefill-only time (a
+    # max_new=1 generate) from the full run, leaving the decode loop
+    t0 = time.time()
+    engine.generate(prompts, ServeConfig(max_new_tokens=1),
+                    extras=extras)
+    prefill_s = time.time() - t0
+    n_decode_toks = args.batch * max(args.max_new - 1, 1)
+    decode_s = max(e2e - prefill_s, 1e-9)
+    print(f"[serve] {args.arch} mode={args.mode} generated {out.shape} "
+          f"tokens; end-to-end {e2e:.2f}s "
+          f"({args.batch * args.max_new / e2e:.1f} tok/s), "
+          f"steady-state decode "
+          f"{n_decode_toks / decode_s:.1f} tok/s")
     print(out[:2])
+
+
+def _serve_continuous(cfg, params, prompts, args) -> None:
+    n_slots = min(args.batch, 8)
+    capacity = args.prompt_len + args.max_new + \
+        (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    engine = ContinuousEngine(cfg, params, n_slots=n_slots,
+                              capacity=capacity)
+    serve_cfg = ServeConfig(max_new_tokens=args.max_new)
+
+    if not args.no_warmup:
+        t0 = time.time()
+        engine.submit(prompts[0], serve_cfg)
+        engine.run()
+        print(f"[serve] warmup (compile) {time.time() - t0:.2f}s "
+              f"traces={engine.trace_counts}")
+
+    t0 = time.time()
+    rids = [engine.submit(row, serve_cfg) for row in prompts]
+    out = engine.run()
+    e2e = time.time() - t0
+    out = {r: out[r] for r in rids}     # drop the warmup request
+    n_toks = sum(len(t) for t in out.values())
+    print(f"[serve] {args.arch} continuous n_slots={n_slots} "
+          f"generated {n_toks} tokens; end-to-end {e2e:.2f}s "
+          f"({n_toks / e2e:.1f} tok/s), "
+          f"decode steps={engine.step_count} "
+          f"traces={engine.trace_counts}")
+    first = next(iter(out.values()))
+    print(first)
 
 
 if __name__ == "__main__":

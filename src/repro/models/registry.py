@@ -1,7 +1,15 @@
-"""Family dispatch: maps LMConfig.family to init/forward functions."""
+"""Family dispatch: maps LMConfig.family to init/forward functions,
+plus the serving hooks the continuous-batching engine uses to treat
+every family uniformly (``input_extras`` for non-token prefill inputs,
+``probe_layer_tags`` for the policy call-site names a request policy
+must be resolved over, ``prompt_extra_len`` for the prompt positions
+those extras occupy in the KV cache)."""
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
 
 from . import decoder, encdec
 from .common import LMConfig
@@ -29,3 +37,64 @@ def model_fns(cfg: LMConfig) -> ModelFns:
     if cfg.family == "encdec":
         return _ENCDEC
     return _DECODER
+
+
+# ----------------------------------------------------------------------
+# Serving hooks (DESIGN.md §2.8)
+# ----------------------------------------------------------------------
+def input_extras(cfg: LMConfig, batch: int,
+                 fill: float = 0.1) -> dict[str, np.ndarray]:
+    """The non-token prefill inputs a family needs (stub embeddings, as
+    the frontends are stubs per the assignment): encdec audio frames,
+    vlm image embeddings.  Token-only families return ``{}``."""
+    if cfg.family == "encdec":
+        return {"frames": np.full((batch, cfg.enc_frames, cfg.d_model),
+                                  fill, np.float32)}
+    if cfg.family == "vlm":
+        return {"img_embeds": np.full((batch, cfg.n_img_tokens,
+                                       cfg.d_model), fill, np.float32)}
+    return {}
+
+
+def prompt_extra_len(cfg: LMConfig, extras: Optional[dict]) -> int:
+    """Extra *prompt positions* the prefill extras occupy in the KV
+    cache.  VLM image embeddings are prepended to the token sequence
+    (``decoder._embed_inputs``) so they consume cache rows; encdec
+    frames feed the encoder side only (cross-KV is a non-sequence
+    leaf), so they do not."""
+    if cfg.family == "vlm" and extras and "img_embeds" in extras:
+        return int(extras["img_embeds"].shape[1])
+    return 0
+
+
+def probe_layer_tags(cfg: LMConfig, params) -> tuple[str, ...]:
+    """All ``policy.matmul`` call-site names one prefill step of this
+    model hits, in first-call order — abstractly traced (eval_shape),
+    so no FLOPs run.  Prefill covers a superset of the decode tags
+    (encoder / cross-KV / image-projection tags only fire at prefill);
+    scanned blocks share tags, so the list is per-layer-*type*, not
+    per-depth.  This is the layer axis a serve request's
+    ``ApproxPolicy`` is resolved over (``policy_assignment``)."""
+    from repro.approx.layers import ApproxPolicy, MatmulBackend
+
+    seen: list[str] = []
+
+    class _Recorder(ApproxPolicy):
+        def backend_for(self, name: str):
+            if name not in seen:
+                seen.append(name)
+            return super().backend_for(name)
+
+    probe = _Recorder(default=MatmulBackend(mode="f32"))
+    fns = model_fns(cfg)
+    seq = 4
+    batch = {"tokens": np.zeros((1, seq), np.int32)}
+    batch.update(input_extras(cfg, 1))
+
+    def fn(params, batch):
+        cache = fns.init_cache(cfg, 1,
+                               seq + prompt_extra_len(cfg, batch) + 1)
+        return fns.forward_prefill(params, batch, cache, cfg, probe)
+
+    jax.eval_shape(fn, params, batch)
+    return tuple(seen)

@@ -11,7 +11,9 @@ accelerator per request costs a dict lookup after the first use.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
+import time
+from collections import Counter, OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional, Union
@@ -20,9 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.layers import ApproxPolicy, EXACT_POLICY
+from repro.approx.layers import (ApproxPolicy, EXACT_POLICY,
+                                 bank_assignment_overrides)
+from repro.approx.specs import BackendSpec, bank_for, policy_assignment
 from repro.models.common import LMConfig
-from repro.models.registry import model_fns
+from repro.models.registry import (input_extras, model_fns,
+                                   probe_layer_tags, prompt_extra_len)
 
 
 @dataclass
@@ -54,8 +59,26 @@ class Engine:
         # compile caches without limit.
         self._steps: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._steps_max = 8
+        # keys with in-flight generates: eviction must skip these — an
+        # evicted-then-reinserted pair would recompile mid-decode (and
+        # a concurrent sweep of other policies could thrash it every
+        # step).  The cache may temporarily exceed _steps_max when all
+        # entries are pinned.
+        self._pinned: "Counter[tuple]" = Counter()
         self.fns = model_fns(cfg)
         self._prefill, self._decode = self._steps_for(self.policy)
+
+    @contextmanager
+    def _pin(self, key: tuple):
+        """Hold a policy's (prefill, decode) pair in the LRU for the
+        duration of a request (re-entrant: a Counter, not a set)."""
+        self._pinned[key] += 1
+        try:
+            yield
+        finally:
+            self._pinned[key] -= 1
+            if self._pinned[key] <= 0:
+                del self._pinned[key]
 
     def _steps_for(self, policy: ApproxPolicy) -> tuple:
         """One jitted (prefill, decode) pair per distinct policy spec."""
@@ -72,7 +95,12 @@ class Engine:
                                                     policy))
         self._steps[key] = (prefill, decode)
         while len(self._steps) > self._steps_max:
-            self._steps.popitem(last=False)
+            victim = next((k for k in self._steps
+                           if k != key and not self._pinned.get(k)),
+                          None)
+            if victim is None:
+                break                   # everything in flight: overshoot
+            del self._steps[victim]
         return self._steps[key]
 
     def _request_policy(self, serve_cfg: "ServeConfig") -> ApproxPolicy:
@@ -84,23 +112,28 @@ class Engine:
     def generate(self, prompts: np.ndarray, serve_cfg: ServeConfig,
                  extras: Optional[dict] = None) -> np.ndarray:
         """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
-        prefill, decode = self._steps_for(self._request_policy(serve_cfg))
-        b, s = prompts.shape
-        max_len = s + serve_cfg.max_new_tokens
-        cache = self.fns.init_cache(self.cfg, b, max_len)
-        batch = {"tokens": jnp.asarray(prompts)}
-        if extras:
-            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-        logits, cache = prefill(self.params, batch, cache)
-        key = jax.random.PRNGKey(serve_cfg.seed)
-        out = []
-        tok = self._sample(logits, serve_cfg, key)
-        out.append(tok)
-        for i in range(serve_cfg.max_new_tokens - 1):
-            logits, cache = decode(self.params, tok, cache)
-            key = jax.random.fold_in(key, i)
+        policy = self._request_policy(serve_cfg)
+        with self._pin(policy.cache_key()):
+            prefill, decode = self._steps_for(policy)
+            b, s = prompts.shape
+            max_len = s + serve_cfg.max_new_tokens
+            if extras:
+                max_len += prompt_extra_len(self.cfg, extras)
+            cache = self.fns.init_cache(self.cfg, b, max_len)
+            batch = {"tokens": jnp.asarray(prompts)}
+            if extras:
+                batch.update({k: jnp.asarray(v)
+                              for k, v in extras.items()})
+            logits, cache = prefill(self.params, batch, cache)
+            key = jax.random.PRNGKey(serve_cfg.seed)
+            out = []
             tok = self._sample(logits, serve_cfg, key)
             out.append(tok)
+            for i in range(serve_cfg.max_new_tokens - 1):
+                logits, cache = decode(self.params, tok, cache)
+                key = jax.random.fold_in(key, i)
+                tok = self._sample(logits, serve_cfg, key)
+                out.append(tok)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     @staticmethod
@@ -109,3 +142,387 @@ class Engine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits / serve_cfg.temperature, axis=-1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# Continuous batching (DESIGN.md §2.8)
+# ----------------------------------------------------------------------
+def _sample_lane(logits, temp, key) -> jax.Array:
+    """Traced per-slot sampler, semantics-identical to
+    ``Engine._sample`` on a (1, V) logits row but with the temperature
+    branch resolved by ``jnp.where`` so one program serves greedy and
+    sampled slots in the same batch."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = jax.random.categorical(
+        key, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)[0]
+
+
+class ContinuousEngine:
+    """Continuous-batching multi-tenant engine: request scheduler +
+    paged KV cache + mixed-policy decode in ONE compiled program.
+
+    Each in-flight request occupies a *slot* of a fixed-shape decode
+    step; requests join at decode-step boundaries (prefill on
+    admission, one banked jit trace per prompt shape) and retire on
+    max-tokens, so the compiled step never reshapes.  Per-request
+    ``ServeConfig.policy`` entries are resolved against the model's
+    probed layer tags (``policy_assignment``) into lanes of a shared
+    ``LutBank``; the decode step vmaps over slots, each lane rebuilding
+    its policy from traced ``luts[assign[slot, j]]`` gathers
+    (``bank_assignment_overrides`` — the same machinery as
+    ``policy_bank_eval``), so N distinct tenant policies decode in O(1)
+    compiled programs.  KV state lives in a ``PagedKVCache``
+    (fixed-size blocks, free-list allocator, per-slot block tables);
+    every registry family serves through the same structural probing.
+
+    Token streams are bit-identical to per-request sequential
+    ``Engine.generate`` with the same ``ServeConfig`` (asserted by
+    ``tests/test_serve.py`` and gated in ``BENCH_serve.json``): paged
+    gathers reproduce the contiguous cache exactly where attention can
+    see it, vmap lanes match B=1 sequential math bitwise, and the
+    per-slot PRNG chain replays ``generate``'s iterative ``fold_in``.
+
+    ``multipliers`` optionally fixes the bank's lane set up front
+    (anything outside it is rejected at submit); by default the bank
+    grows on first use of a new multiplier, recompiling the step once
+    per growth (counted in ``trace_counts['decode']``).  ``sharding``
+    (``repro.launch.mesh.slot_sharding``) places the slot axis — and
+    with it the whole vmapped decode — across devices.
+    """
+
+    def __init__(self, cfg: LMConfig, params, *, library=None,
+                 multipliers=None, default_policy=None,
+                 n_slots: int = 4, capacity: int = 64,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 mode: str = "lut", variant: str = "ref",
+                 block_m: int = 512, base: Optional[BackendSpec] = None,
+                 sharding=None):
+        from .kv_cache import PagedKVCache
+        from .scheduler import Request, RequestState, Scheduler
+        self._Request, self._RequestState = Request, RequestState
+        self.cfg = cfg
+        self.params = params
+        self.fns = model_fns(cfg)
+        self._library = library
+        self.mode, self.variant, self.block_m = mode, variant, block_m
+        self.capacity, self.n_slots = int(capacity), int(n_slots)
+        self.layers = probe_layer_tags(cfg, params)
+        if default_policy is None:
+            default_policy = ApproxPolicy(default=BackendSpec(
+                mode=mode, multiplier="mul8u_exact", block_m=block_m,
+                ste=False, variant=variant))
+        elif not isinstance(default_policy, ApproxPolicy):
+            default_policy = ApproxPolicy.from_json(default_policy)
+        self.default_policy = default_policy
+        self.base = (base if base is not None
+                     else BackendSpec.golden()).materialize(library)
+        self.kv = PagedKVCache(self.fns, cfg, n_slots=self.n_slots,
+                               capacity=self.capacity,
+                               block_size=block_size, n_blocks=n_blocks)
+        self.scheduler = Scheduler(self.n_slots)
+        self._sharding = sharding
+        # per-slot host state (device-transferred each step)
+        n = self.n_slots
+        self._tokens = np.zeros(n, np.int32)
+        self._lengths = np.zeros(n, np.int32)
+        self._n_gen = np.zeros(n, np.int32)
+        self._active = np.zeros(n, bool)
+        self._temps = np.zeros(n, np.float32)
+        self._keys = np.zeros((n, 2), np.uint32)
+        self._assign = np.zeros((n, len(self.layers)), np.int32)
+        # shared bank (grows unless `multipliers` fixes it)
+        self.trace_counts = {"prefill": 0, "decode": 0, "bank_builds": 0}
+        self._fixed_bank = multipliers is not None
+        self._names: list[str] = []
+        self._bank = None
+        self._rid = 0
+        self.step_count = 0
+        seed_names = list(multipliers) if multipliers else []
+        for m in policy_assignment(self.default_policy, self.layers,
+                                   mode=mode, block_m=block_m).values():
+            if m not in seed_names:
+                if self._fixed_bank:
+                    raise ValueError(
+                        f"default policy needs {m!r}, which is not in "
+                        f"the fixed multiplier set {multipliers}")
+                seed_names.append(m)
+        self._fixed_bank = False        # allow the seed build
+        self._grow_bank(seed_names)
+        self._fixed_bank = multipliers is not None
+
+    # -- bank assembly --------------------------------------------------
+    def _grow_bank(self, new_names) -> None:
+        self._names.extend(n for n in new_names if n not in self._names)
+        self._bank = bank_for(tuple(self._names), self._library,
+                              block_m=self.block_m)
+        self._luts = jnp.asarray(self._bank.luts)
+        self._bits = jnp.asarray(self._bank.lane_bits, jnp.int32)
+        self._masks = jnp.asarray(self._bank.lane_masks, jnp.uint32)
+        # any_wide / reduce are static program structure: rebuild the
+        # jitted steps (the lut-count change would retrace them anyway)
+        self._decode_fn = self._make_decode(self._bank)
+        self._prefill_fn = self._make_prefill(self._bank)
+        self.trace_counts["bank_builds"] += 1
+
+    def _resolve_policy(self, serve: ServeConfig) -> np.ndarray:
+        """Request policy → per-layer bank-lane row, growing the shared
+        bank when a (non-fixed) engine first sees a multiplier."""
+        policy = (self.default_policy if serve.policy is None
+                  else ApproxPolicy.from_json(serve.policy))
+        assignment = policy_assignment(policy, self.layers,
+                                       mode=self.mode,
+                                       block_m=self.block_m)
+        new = [m for m in dict.fromkeys(assignment.values())
+               if m not in self._names]
+        if new:
+            if self._fixed_bank:
+                raise ValueError(
+                    f"request needs multipliers {new} outside the "
+                    f"engine's fixed bank {self._names}")
+            self._grow_bank(new)
+        index = {m: i for i, m in enumerate(self._bank.names)}
+        return np.asarray([index[assignment[l]] for l in self.layers],
+                          np.int32)
+
+    def lane_policy(self, serve: ServeConfig) -> ApproxPolicy:
+        """The sequential (materialized) policy a slot running this
+        request emulates — ``base`` everywhere, request multiplier per
+        probed layer.  Sequential ``Engine.generate`` under this policy
+        is the bit-identity reference for the banked lane."""
+        policy = (self.default_policy if serve.policy is None
+                  else ApproxPolicy.from_json(serve.policy))
+        assignment = policy_assignment(policy, self.layers,
+                                       mode=self.mode,
+                                       block_m=self.block_m)
+        overrides = [
+            (layer, BackendSpec(mode=self.mode, multiplier=name,
+                                block_m=self.block_m, ste=False,
+                                variant=self.variant))
+            for layer, name in assignment.items()]
+        return ApproxPolicy(default=self.base,
+                            overrides=overrides).materialize(self._library)
+
+    # -- compiled steps -------------------------------------------------
+    def _overrides(self, bank, luts, bits, masks, assign_row):
+        return bank_assignment_overrides(
+            bank, luts, assign_row, self.layers, mode=self.mode,
+            variant=self.variant,
+            lane_bits=bits if bank.any_wide else None,
+            lane_masks=masks if bank.any_wide else None)
+
+    def _make_prefill(self, bank):
+        cfg, fns, counts = self.cfg, self.fns, self.trace_counts
+        capacity, base = self.capacity, self.base
+
+        def prefill(params, luts, bits, masks, assign_row, batch, temp,
+                    key0):
+            counts["prefill"] += 1
+            cache = fns.init_cache(cfg, 1, capacity)
+            policy = ApproxPolicy(
+                default=base,
+                overrides=self._overrides(bank, luts, bits, masks,
+                                          assign_row))
+            logits, cache = fns.forward_prefill(params, batch, cache,
+                                                cfg, policy)
+            return _sample_lane(logits, temp, key0), cache
+
+        return jax.jit(prefill)
+
+    def _make_decode(self, bank):
+        cfg, fns, counts = self.cfg, self.fns, self.trace_counts
+        layout, base = self.kv.layout, self.base
+        bs = self.kv.block_size
+        n_rows = self.kv.n_blocks * self.kv.block_size
+        from .kv_cache import (physical_indices, slot_gather_leaves,
+                               token_rows)
+
+        def step(params, luts, bits, masks, assign, pools, dense,
+                 tables, tokens, lengths, active, temps, keys, n_gen):
+            counts["decode"] += 1
+            phys = physical_indices(tables, layout.capacity, bs)
+
+            def lane(assign_row, phys_s, dense_row, token, length,
+                     temp, key0, gen):
+                leaves = slot_gather_leaves(layout, pools, dense_row,
+                                            phys_s)
+                cache = jax.tree_util.tree_unflatten(layout.treedef,
+                                                     leaves)
+                policy = ApproxPolicy(
+                    default=base,
+                    overrides=self._overrides(bank, luts, bits, masks,
+                                              assign_row))
+                logits, new_cache = fns.forward_decode(
+                    params, token[None], cache, cfg, policy)
+                new_leaves = jax.tree_util.tree_leaves(new_cache)
+                rows = token_rows(layout, new_leaves, length)
+                dense_new = tuple(
+                    l for l, t in zip(new_leaves, layout.seq_axes)
+                    if t is None)
+                # replay generate()'s iterative key chain for this
+                # slot's step index (gen = tokens already emitted)
+                key = jax.lax.fori_loop(
+                    0, gen, lambda i, k: jax.random.fold_in(k, i), key0)
+                return _sample_lane(logits, temp, key), tuple(rows), \
+                    dense_new
+
+            toks, rows, dense_new = jax.vmap(lane)(
+                assign, phys, tuple(dense), tokens, lengths, temps,
+                keys, n_gen)
+            # scatter each slot's new row at its next logical position.
+            # Inactive slots get an out-of-bounds POSITIVE sentinel so
+            # mode="drop" really drops them: -1 would WRAP (negative
+            # indices are in-bounds in JAX) and clobber the last pool
+            # row of whichever request owns the last block.
+            widx = jnp.where(
+                active,
+                jnp.take_along_axis(phys, lengths[:, None], axis=1)[:, 0],
+                n_rows)
+            new_pools = tuple(
+                p.at[widx].set(r.astype(p.dtype), mode="drop")
+                for p, r in zip(pools, rows))
+
+            def keep_active(new, old):
+                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new.astype(old.dtype), old)
+
+            new_dense = tuple(keep_active(n_, o)
+                              for n_, o in zip(dense_new, dense))
+            return jnp.where(active, toks, tokens), new_pools, new_dense
+
+        return jax.jit(step)
+
+    # -- request lifecycle ----------------------------------------------
+    def submit(self, prompt, serve: Optional[ServeConfig] = None,
+               extras: Optional[dict] = None,
+               rid: Optional[str] = None) -> str:
+        """Queue one request.  Policy resolution (and therefore bank
+        membership validation) happens here, so a bad policy fails the
+        submit, not a later step."""
+        serve = serve if serve is not None else ServeConfig()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if rid is None:
+            rid = f"r{self._rid}"
+            self._rid += 1
+        if extras is None:
+            extras = input_extras(self.cfg, 1) or None
+        assign_row = self._resolve_policy(serve)
+        prefill_len = len(prompt) + prompt_extra_len(self.cfg, extras)
+        total_len = prefill_len + serve.max_new_tokens
+        # decode at the last position still writes row total_len - 1
+        if total_len > self.capacity:
+            raise ValueError(
+                f"request {rid!r} needs {total_len} cache rows "
+                f"(prefill {prefill_len} + {serve.max_new_tokens} new); "
+                f"engine capacity is {self.capacity}")
+        state = self._RequestState(
+            request=self._Request(rid=rid, prompt=prompt, serve=serve,
+                                  extras=extras),
+            assign_row=assign_row, prefill_len=prefill_len,
+            total_len=total_len)
+        self.scheduler.submit(state, self.step_count)
+        return rid
+
+    def _retire(self) -> list:
+        done = [st for st in self.scheduler.running.values() if st.done]
+        for st in done:
+            slot = st.slot
+            self.kv.release(slot)
+            self._active[slot] = False
+            self.scheduler.finish(st, self.step_count)
+        return done
+
+    def _admit(self) -> list:
+        admitted = []
+        while True:
+            st = self.scheduler.head()
+            if st is None or not self.scheduler.free_slots():
+                break
+            if not self.kv.can_allocate(self.kv.blocks_needed(
+                    st.total_len)):
+                break                   # strict FIFO: head blocks queue
+            st = self.scheduler.admit(self.step_count)
+            slot = st.slot
+            self.kv.allocate(slot, st.total_len)
+            serve = st.request.serve
+            batch = {"tokens": jnp.asarray(st.request.prompt[None])}
+            if st.request.extras:
+                batch.update({k: jnp.asarray(np.asarray(v))
+                              for k, v in st.request.extras.items()})
+            key0 = np.asarray(jax.random.PRNGKey(serve.seed))
+            tok, cache = self._prefill_fn(
+                self.params, self._luts, self._bits, self._masks,
+                jnp.asarray(st.assign_row), batch,
+                jnp.float32(serve.temperature), jnp.asarray(key0))
+            self.kv.write_prefill(slot, cache, st.prefill_len)
+            st.tokens.append(int(tok))
+            self._tokens[slot] = int(tok)
+            self._lengths[slot] = st.prefill_len
+            self._n_gen[slot] = 1
+            self._temps[slot] = serve.temperature
+            self._keys[slot] = key0
+            self._assign[slot] = st.assign_row
+            self._active[slot] = not st.done    # max_new==1: retire next
+            admitted.append(st)
+        return admitted
+
+    def _place(self, x):
+        if self._sharding is None:
+            return jnp.asarray(x)
+        from repro.launch.mesh import leading_axis_sharding
+        return jax.device_put(
+            jnp.asarray(x),
+            leading_axis_sharding(self._sharding, np.ndim(x)))
+
+    def _decode_once(self) -> bool:
+        if not self._active.any():
+            return False
+        toks, pools, dense = self._decode_fn(
+            self.params, self._luts, self._bits, self._masks,
+            self._place(self._assign), tuple(self.kv.pools),
+            tuple(self._place(d) for d in self.kv.dense),
+            self._place(self.kv.block_tables),
+            self._place(self._tokens), self._place(self._lengths),
+            self._place(self._active), self._place(self._temps),
+            self._place(self._keys), self._place(self._n_gen))
+        self.kv.pools = list(pools)
+        self.kv.dense = list(dense)
+        toks = np.asarray(toks)
+        for slot, st in self.scheduler.running.items():
+            if not self._active[slot]:
+                continue
+            st.tokens.append(int(toks[slot]))
+            self._tokens[slot] = toks[slot]
+            self._lengths[slot] += 1
+            self._n_gen[slot] += 1
+            if st.done:
+                self._active[slot] = False   # retired next step
+        return True
+
+    def step(self) -> dict:
+        """One decode-step boundary: retire finished requests, admit
+        from the queue (prefill + KV block reservation), run one
+        mixed-policy decode step over all active slots."""
+        self.step_count += 1
+        finished = self._retire()
+        admitted = self._admit()
+        decoded = self._decode_once()
+        if not (finished or admitted or decoded) and \
+                self.scheduler.pending:
+            st = self.scheduler.head()
+            raise RuntimeError(
+                f"scheduler stalled: request {st.rid!r} needs "
+                f"{self.kv.blocks_needed(st.total_len)} blocks / a "
+                f"free slot and none can ever free up")
+        return {"step": self.step_count, "finished": finished,
+                "admitted": admitted, "decoded": decoded,
+                "n_active": int(self._active.sum()),
+                "n_pending": len(self.scheduler.pending)}
+
+    def run(self) -> dict:
+        """Drive steps until the queue and batch drain; returns
+        {rid: (max_new_tokens,) int32} in submission order."""
+        while not self.scheduler.idle:
+            self.step()
+        return {st.rid: np.asarray(st.tokens, np.int32)
+                for st in self.scheduler.finished.values()}

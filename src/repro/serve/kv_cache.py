@@ -1,0 +1,260 @@
+"""Paged/blocked KV cache for continuous batching (DESIGN.md §2.8).
+
+The contiguous per-request caches the model families build
+(``init_cache(cfg, batch, max_len)``) don't compose into a multi-tenant
+server: a request's cache is sized to ITS max length, and joining /
+retiring requests would reshape the batch axis and retrace.  This
+module virtualizes the *sequence* axis instead, vLLM-style:
+
+  * ``cache_layout`` probes a family's cache pytree structurally — it
+    abstractly initializes at two capacities and marks, per leaf, the
+    axis whose extent changed as the sequence (T) axis.  No per-family
+    code: dense KV ``(G,B,T,H,D)``, MLA ``(B,T,kv_lora)``, encdec
+    self-KV ``(L,B,T,H,D)`` all identify their own T axis, while
+    non-sequence leaves (``pos`` scalars, mamba conv/ssm state, encdec
+    cross-KV) are marked dense.
+  * Sequence leaves live in fixed-size-block *pools* shaped
+    ``(n_blocks * block_size, *rest)`` (T axis moved to the front);
+    a free-list allocator hands blocks to requests, and a per-slot
+    block table maps logical position → physical pool row.
+  * Non-sequence leaves live in a slot-major dense store
+    ``(n_slots, *leaf_shape)``.
+
+``slot_gather_leaves`` / ``token_rows`` are the *traced* halves: inside
+the engine's jitted decode step each vmap lane gathers its slot's
+logical view ``pool[block_table[t // bs] * bs + t % bs]`` back into the
+exact pytree ``init_cache`` would have built, runs the unmodified model
+``forward_decode``, and returns the one new row to scatter.  Because
+attention masks with a -1e30 bias (exact zeros after softmax), the
+gathered tail garbage beyond a request's length never contributes —
+paged decode is bit-identical to contiguous decode, which
+``tests/test_serve.py`` asserts per family.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """Structural description of ONE request's cache pytree: treedef +
+    per-leaf shape/dtype, with the sequence axis identified per leaf
+    (None = non-sequence leaf).  ``capacity`` is the probed max_len —
+    every slot's logical sequence space."""
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    seq_axes: tuple          # per leaf: T-axis index, or None
+    capacity: int
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def seq_positions(self) -> tuple:
+        return tuple(i for i, t in enumerate(self.seq_axes)
+                     if t is not None)
+
+    @property
+    def dense_positions(self) -> tuple:
+        return tuple(i for i, t in enumerate(self.seq_axes) if t is None)
+
+
+def cache_layout(fns, cfg, capacity: int) -> CacheLayout:
+    """Probe ``fns.init_cache``'s pytree for the sequence axes by
+    abstract double-initialization at ``capacity`` and ``capacity+1``:
+    the axis whose extent differs is the T axis.  eval_shape only — no
+    cache is materialized."""
+    a = jax.eval_shape(lambda: fns.init_cache(cfg, 1, capacity))
+    b = jax.eval_shape(lambda: fns.init_cache(cfg, 1, capacity + 1))
+    la, treedef = jax.tree_util.tree_flatten(a)
+    lb, treedef_b = jax.tree_util.tree_flatten(b)
+    if treedef != treedef_b:
+        raise ValueError("init_cache structure depends on max_len; "
+                         "cannot page this family")
+    seq_axes = []
+    for xa, xb in zip(la, lb):
+        diff = [i for i, (p, q) in enumerate(zip(xa.shape, xb.shape))
+                if p != q]
+        if len(diff) > 1:
+            raise ValueError(
+                f"cache leaf {xa.shape} varies on {len(diff)} axes with "
+                "max_len; paging supports exactly one sequence axis")
+        seq_axes.append(diff[0] if diff else None)
+    return CacheLayout(treedef=treedef,
+                       shapes=tuple(x.shape for x in la),
+                       dtypes=tuple(x.dtype for x in la),
+                       seq_axes=tuple(seq_axes),
+                       capacity=capacity)
+
+
+# ----------------------------------------------------------------------
+# Traced helpers (used inside the engine's jitted step)
+# ----------------------------------------------------------------------
+def physical_indices(block_tables, capacity: int, block_size: int):
+    """(n_slots, blocks_per_slot) block tables → (n_slots, capacity)
+    physical pool rows: ``table[t // bs] * bs + t % bs``.  Unallocated
+    table entries (-1) yield negative rows — gathers clip them (the
+    rows they'd read are masked out of attention anyway); scatters must
+    NOT rely on ``mode="drop"`` for them (negative indices wrap in
+    JAX) and replace them with an out-of-range positive sentinel."""
+    logical = jnp.arange(capacity, dtype=jnp.int32)
+    return (jnp.take(block_tables, logical // block_size, axis=-1)
+            * block_size + logical % block_size)
+
+
+def slot_gather_leaves(layout: CacheLayout, pools, dense_row, phys):
+    """Rebuild ONE slot's cache leaves (request-shaped, B=1) from the
+    pools + its dense-store row.  ``phys``: (capacity,) physical rows.
+    Returns leaves in ``layout.treedef`` order."""
+    leaves, pi, di = [], 0, 0
+    for t in layout.seq_axes:
+        if t is None:
+            leaves.append(dense_row[di])
+            di += 1
+        else:
+            pool = pools[pi]
+            idx = jnp.clip(phys, 0, pool.shape[0] - 1)
+            # clip, don't rely on jnp.take's OOB fill: NaN fill would
+            # poison masked attention scores (NaN survives the mask)
+            leaves.append(jnp.moveaxis(jnp.take(pool, idx, axis=0),
+                                       0, t))
+            pi += 1
+    return leaves
+
+
+def token_rows(layout: CacheLayout, new_leaves, pos):
+    """Extract the one new row (logical position ``pos``) each sequence
+    leaf gained this decode step — the rows the engine scatters back
+    into the pools."""
+    rows = []
+    for leaf, t in zip(new_leaves, layout.seq_axes):
+        if t is not None:
+            rows.append(jax.lax.dynamic_index_in_dim(
+                leaf, pos, axis=t, keepdims=False))
+    return rows
+
+
+# ----------------------------------------------------------------------
+# Host-side cache object
+# ----------------------------------------------------------------------
+class PagedKVCache:
+    """Block pools + dense store + free-list allocator + block tables.
+
+    One instance serves all slots of a ``ContinuousEngine``; a family
+    with no sequence leaves (pure SSM: conv + state carry, O(1) decode)
+    simply has zero pools and allocates zero blocks per request.
+    """
+
+    def __init__(self, fns, cfg, *, n_slots: int, capacity: int,
+                 block_size: int = 16, n_blocks: Optional[int] = None):
+        self.layout = cache_layout(fns, cfg, capacity)
+        self.n_slots = int(n_slots)
+        self.block_size = int(block_size)
+        self.blocks_per_slot = -(-capacity // block_size)   # ceil
+        self.n_blocks = (int(n_blocks) if n_blocks is not None
+                         else self.n_slots * self.blocks_per_slot)
+        rows = self.n_blocks * self.block_size
+        lay = self.layout
+        # pools: sequence leaves, T axis first, request dims preserved
+        self.pools = [
+            jnp.zeros((rows, *[d for i, d in enumerate(lay.shapes[p])
+                               if i != lay.seq_axes[p]]), lay.dtypes[p])
+            for p in lay.seq_positions]
+        # dense store: one request-shaped row per slot
+        self.dense = [jnp.zeros((self.n_slots, *lay.shapes[p]),
+                                lay.dtypes[p])
+                      for p in lay.dense_positions]
+        self.block_tables = np.full((self.n_slots, self.blocks_per_slot),
+                                    -1, np.int32)
+        self._free: list[int] = list(range(self.n_blocks))
+
+    # -- allocator ------------------------------------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, total_len: int) -> int:
+        """Blocks to reserve for a request whose cache will hold
+        ``total_len`` rows (prefill + all generated tokens — reserved
+        up front so admission can never OOM mid-decode).  Zero for
+        sequence-leaf-less families."""
+        if not self.layout.seq_positions:
+            return 0
+        if total_len > self.layout.capacity:
+            raise ValueError(f"request needs {total_len} cache rows; "
+                             f"engine capacity is {self.layout.capacity}")
+        return -(-total_len // self.block_size)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self._free)
+
+    def allocate(self, slot: int, total_len: int) -> list[int]:
+        n = self.blocks_needed(total_len)
+        if not self.can_allocate(n):
+            raise RuntimeError(
+                f"paged KV exhausted: need {n} blocks, "
+                f"{len(self._free)} free")
+        if (self.block_tables[slot] >= 0).any():
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        blocks = [self._free.pop(0) for _ in range(n)]
+        self.block_tables[slot, :n] = blocks
+        return blocks
+
+    def release(self, slot: int) -> None:
+        held = [int(b) for b in self.block_tables[slot] if b >= 0]
+        self._free.extend(held)
+        self.block_tables[slot] = -1
+
+    def phys_indices(self, slot: int) -> np.ndarray:
+        """(capacity,) physical rows for one slot (host-side mirror of
+        ``physical_indices``; negative where unallocated)."""
+        table = self.block_tables[slot]
+        logical = np.arange(self.layout.capacity)
+        return (table[logical // self.block_size] * self.block_size
+                + logical % self.block_size).astype(np.int32)
+
+    # -- data movement --------------------------------------------------
+    def write_prefill(self, slot: int, cache, length: int) -> None:
+        """Scatter a freshly prefilled request-shaped cache into this
+        slot: the first ``length`` rows of each sequence leaf go to the
+        slot's allocated pool rows, non-sequence leaves overwrite the
+        slot's dense-store row."""
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        if treedef != self.layout.treedef:
+            raise ValueError("prefill cache structure does not match "
+                             "the probed layout")
+        phys = jnp.asarray(self.phys_indices(slot)[:length])
+        pi, di = 0, 0
+        for leaf, t in zip(leaves, self.layout.seq_axes):
+            if t is None:
+                self.dense[di] = self.dense[di].at[slot].set(leaf)
+                di += 1
+            else:
+                rows = jnp.moveaxis(leaf, t, 0)[:length]
+                self.pools[pi] = self.pools[pi].at[phys].set(rows)
+                pi += 1
+
+    def gather_slot(self, slot: int):
+        """Eagerly rebuild one slot's full cache pytree (tests /
+        debugging; the jitted path uses ``slot_gather_leaves``)."""
+        phys = jnp.asarray(self.phys_indices(slot))
+        dense_row = [d[slot] for d in self.dense]
+        leaves = slot_gather_leaves(self.layout, self.pools, dense_row,
+                                    phys)
+        return jax.tree_util.tree_unflatten(self.layout.treedef, leaves)
+
+    def stats(self) -> dict:
+        used = self.n_blocks - len(self._free)
+        return {"n_blocks": self.n_blocks, "used_blocks": used,
+                "free_blocks": len(self._free),
+                "block_size": self.block_size,
+                "n_pools": len(self.pools), "n_dense": len(self.dense)}

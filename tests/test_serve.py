@@ -1,0 +1,411 @@
+"""Continuous-batching serving path (DESIGN.md §2.8): mixed-policy
+continuous-batch vs sequential ``generate`` bit-identity, the O(1)
+compiled-programs gate, paged-KV vs contiguous-cache equivalence,
+scheduler admission/retire/join invariants, and the ``Engine._steps``
+LRU pinning regression."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.layers import ApproxPolicy
+from repro.approx.specs import BackendSpec, PolicyBank, policy_assignment
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+from repro.models.common import LMConfig
+from repro.models.registry import (input_extras, model_fns,
+                                   probe_layer_tags, prompt_extra_len)
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+from repro.serve.kv_cache import PagedKVCache, cache_layout
+from repro.serve.scheduler import Scheduler
+
+MULTS = ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc5", "mul8u_trunc3"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 3, 5):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LMConfig(name="tiny-dense", family="dense", n_layers=2,
+                    d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab=128, head_dim=16, dtype=jnp.float32,
+                    remat=False, loss_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return model_fns(tiny_cfg).init_params(jax.random.PRNGKey(0),
+                                           tiny_cfg)
+
+
+def _uniform(mult):
+    return ApproxPolicy(default=BackendSpec(
+        mode="lut", multiplier=mult, ste=False)).to_json()
+
+
+def _mixed_requests(vocab, rng):
+    """4 distinct policies (incl. engine default and a heterogeneous
+    per-layer one), mixed greedy/sampled."""
+    hetero = ApproxPolicy(
+        default=BackendSpec(mode="lut", multiplier="mul8u_trunc5",
+                            ste=False),
+        overrides=[("attn.*", BackendSpec(mode="lut",
+                                          multiplier="mul8u_trunc6",
+                                          ste=False))]).to_json()
+    serves = [
+        ServeConfig(max_new_tokens=5, policy=None),
+        ServeConfig(max_new_tokens=7, policy=_uniform("mul8u_trunc6"),
+                    temperature=0.8, seed=3),
+        ServeConfig(max_new_tokens=4, policy=_uniform("mul8u_trunc3")),
+        ServeConfig(max_new_tokens=6, policy=hetero, temperature=1.1,
+                    seed=9),
+    ]
+    prompts = [rng.integers(0, vocab, (int(rng.integers(3, 9)),)
+                            ).astype(np.int32) for _ in serves]
+    return prompts, serves
+
+
+# ----------------------------------------------------------------------
+# Tentpole: mixed-policy bit-identity + O(1) compiled programs
+# ----------------------------------------------------------------------
+def test_mixed_policy_bit_identity_and_o1_traces(tiny_cfg, tiny_params,
+                                                 lib):
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           multipliers=MULTS, n_slots=3, capacity=32,
+                           block_size=4)
+    rng = np.random.default_rng(0)
+    prompts, serves = _mixed_requests(tiny_cfg.vocab, rng)
+    assert len({s.policy for s in serves}) >= 4    # N >= 4 distinct
+    rids = [eng.submit(p, s) for p, s in zip(prompts, serves)]
+    out = eng.run()
+    # continuous batching really happened: 4 requests over 3 slots
+    assert eng.scheduler.stats()["finished"] == 4
+    # O(1) compiled programs: ONE decode trace for 4 distinct policies
+    # over 3 concurrent slots (prompts share no length -> prefill
+    # traces track distinct shapes, not policies)
+    assert eng.trace_counts["decode"] == 1
+    assert eng.trace_counts["bank_builds"] == 1
+    for p, s, rid in zip(prompts, serves, rids):
+        ref = Engine(tiny_cfg, tiny_params, eng.lane_policy(s),
+                     library=lib).generate(p[None], s)[0]
+        np.testing.assert_array_equal(out[rid], ref, err_msg=rid)
+
+
+def test_bank_growth_retraces_once_then_stable(tiny_cfg, tiny_params,
+                                               lib):
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           n_slots=2, capacity=24, block_size=4)
+    prompt = np.arange(4, dtype=np.int32) + 1
+    eng.submit(prompt, ServeConfig(max_new_tokens=3))
+    eng.run()
+    assert eng.trace_counts["bank_builds"] == 1
+    # new multiplier -> bank grows, decode recompiles ONCE
+    eng.submit(prompt, ServeConfig(max_new_tokens=3,
+                                   policy=_uniform("mul8u_trunc6")))
+    eng.run()
+    assert eng.trace_counts["bank_builds"] == 2
+    decode_after_growth = eng.trace_counts["decode"]
+    # same policy set again: no further traces
+    eng.submit(prompt, ServeConfig(max_new_tokens=3,
+                                   policy=_uniform("mul8u_trunc6")))
+    eng.submit(prompt, ServeConfig(max_new_tokens=3))
+    eng.run()
+    assert eng.trace_counts["decode"] == decode_after_growth
+
+
+def test_fixed_bank_rejects_unknown_multiplier(tiny_cfg, tiny_params,
+                                               lib):
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           multipliers=["mul8u_exact"], n_slots=2,
+                           capacity=16, block_size=4)
+    with pytest.raises(ValueError, match="fixed bank"):
+        eng.submit(np.arange(4, dtype=np.int32),
+                   ServeConfig(policy=_uniform("mul8u_trunc6")))
+
+
+def test_non_lut_policy_rejected_at_submit(tiny_cfg, tiny_params, lib):
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           n_slots=2, capacity=16, block_size=4)
+    f32 = ApproxPolicy(default=BackendSpec(mode="f32")).to_json()
+    with pytest.raises(ValueError, match="mode"):
+        eng.submit(np.arange(4, dtype=np.int32),
+                   ServeConfig(policy=f32))
+
+
+# ----------------------------------------------------------------------
+# Paged KV cache
+# ----------------------------------------------------------------------
+def test_cache_layout_identifies_sequence_axes(tiny_cfg):
+    fns = model_fns(tiny_cfg)
+    layout = cache_layout(fns, tiny_cfg, 16)
+    # dense decoder: k/v sequence leaves + one pos scalar
+    assert layout.capacity == 16
+    assert len(layout.seq_positions) == 2
+    assert len(layout.dense_positions) == 1
+    for p in layout.seq_positions:
+        assert layout.shapes[p][layout.seq_axes[p]] == 16
+
+
+def test_paged_vs_contiguous_cache_equivalence(tiny_cfg, tiny_params):
+    """write_prefill + gather_slot round-trips the contiguous prefill
+    cache exactly wherever attention can see it (rows < length)."""
+    fns = model_fns(tiny_cfg)
+    capacity, length = 16, 6
+    cache = fns.init_cache(tiny_cfg, 1, capacity)
+    batch = {"tokens": jnp.arange(length, dtype=jnp.int32)[None] + 1}
+    logits, cache = fns.forward_prefill(cache=cache, cfg=tiny_cfg,
+                                        params=tiny_params, batch=batch)
+    kv = PagedKVCache(fns, tiny_cfg, n_slots=2, capacity=capacity,
+                      block_size=4)
+    kv.allocate(1, capacity)
+    kv.write_prefill(1, cache, length)
+    back = kv.gather_slot(1)
+    flat_a, td_a = jax.tree_util.tree_flatten(cache)
+    flat_b, td_b = jax.tree_util.tree_flatten(back)
+    assert td_a == td_b
+    for a, b, t in zip(flat_a, flat_b, kv.layout.seq_axes):
+        if t is None:
+            np.testing.assert_array_equal(a, b)
+        else:
+            a_rows = jnp.moveaxis(a, t, 0)[:length]
+            b_rows = jnp.moveaxis(b, t, 0)[:length]
+            np.testing.assert_array_equal(a_rows, b_rows)
+    # decode logits through the paged view match the contiguous cache
+    tok = jnp.array([7], jnp.int32)
+    ref_logits, _ = fns.forward_decode(tiny_params, tok, cache, tiny_cfg)
+    got_logits, _ = fns.forward_decode(tiny_params, tok, back, tiny_cfg)
+    np.testing.assert_array_equal(np.asarray(ref_logits),
+                                  np.asarray(got_logits))
+
+
+def test_allocator_free_list_round_trip(tiny_cfg):
+    fns = model_fns(tiny_cfg)
+    kv = PagedKVCache(fns, tiny_cfg, n_slots=3, capacity=16,
+                      block_size=4)
+    assert kv.n_free_blocks == 12
+    kv.allocate(0, 9)                   # ceil(9/4) = 3 blocks
+    kv.allocate(2, 16)
+    assert kv.n_free_blocks == 12 - 3 - 4
+    with pytest.raises(RuntimeError, match="already holds"):
+        kv.allocate(0, 4)
+    kv.release(0)
+    assert kv.n_free_blocks == 12 - 4
+    kv.release(2)
+    assert kv.n_free_blocks == 12
+    assert (kv.block_tables == -1).all()
+    with pytest.raises(ValueError, match="capacity"):
+        kv.blocks_needed(17)
+
+
+# ----------------------------------------------------------------------
+# Scheduler invariants
+# ----------------------------------------------------------------------
+def test_scheduler_admission_retire_join_invariants(tiny_cfg,
+                                                    tiny_params, lib):
+    """More requests than slots + a KV pool too small for full slot
+    occupancy: requests must join at step boundaries, hold disjoint
+    blocks, and retire cleanly — invariants checked after EVERY step."""
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           multipliers=MULTS, n_slots=3, capacity=16,
+                           block_size=4, n_blocks=8)  # < 3 full slots
+    rng = np.random.default_rng(1)
+    serves = [ServeConfig(max_new_tokens=int(rng.integers(2, 6)),
+                          policy=_uniform(MULTS[i % len(MULTS)]))
+              for i in range(7)]
+    rids = [eng.submit(rng.integers(0, tiny_cfg.vocab, (5,)
+                                    ).astype(np.int32), s)
+            for s in serves]
+    max_running = 0
+    while not eng.scheduler.idle:
+        eng.step()
+        eng.scheduler.check_invariants(eng.kv)
+        max_running = max(max_running, len(eng.scheduler.running))
+    assert max_running >= 2             # requests really overlapped
+    # admission is FIFO; completion order may differ (varying max_new)
+    assert set(eng.scheduler.finished) == set(rids)
+    for rid, s in zip(rids, serves):
+        assert len(eng.scheduler.finished[rid].tokens) \
+            == s.max_new_tokens
+    assert eng.kv.n_free_blocks == eng.kv.n_blocks
+    assert eng.trace_counts["decode"] == 1
+
+
+def test_scheduler_strict_fifo_admission(tiny_cfg):
+    fns = model_fns(tiny_cfg)
+    sched = Scheduler(n_slots=2)
+    assert sched.idle
+    assert sched.head() is None
+    assert sched.free_slots() == [0, 1]
+    with pytest.raises(RuntimeError):
+        sched.admit(0)                  # nothing queued
+
+
+def test_inactive_lane_scatter_does_not_corrupt_last_block(
+        tiny_cfg, tiny_params, lib):
+    """Regression: inactive decode lanes must not scatter their garbage
+    row into the pools.  A ``-1`` write index WRAPS to the last pool
+    row (negative indices are in-bounds in JAX; ``mode="drop"`` only
+    drops positive out-of-range), silently corrupting whichever request
+    owns the last block — visible only once allocator churn places that
+    block at a low logical position of a live request."""
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           n_slots=2, capacity=8, block_size=4,
+                           n_blocks=3)
+    # churn: the first request takes blocks [0, 1]; releasing appends
+    # them AFTER the never-used block 2, so the next request's FIRST
+    # block is the LAST block of the pools — its logical positions
+    # 0..3 map to the final pool rows, inside attention's window from
+    # the first decode step, while the empty second slot stays
+    # inactive every step.
+    eng.submit(np.arange(4, dtype=np.int32),
+               ServeConfig(max_new_tokens=2))
+    eng.run()
+    assert eng.kv._free[0] == 2
+    prompt = np.arange(4, dtype=np.int32) + 7
+    serve = ServeConfig(max_new_tokens=4)
+    rid = eng.submit(prompt, serve)     # allocates blocks [2, 0]
+    out = eng.run()[rid]
+    ref = Engine(tiny_cfg, tiny_params, eng.lane_policy(serve),
+                 library=lib).generate(prompt[None], serve)[0]
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_oversized_request_rejected(tiny_cfg, tiny_params, lib):
+    eng = ContinuousEngine(tiny_cfg, tiny_params, library=lib,
+                           n_slots=2, capacity=8, block_size=4)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.arange(6, dtype=np.int32),
+                   ServeConfig(max_new_tokens=4))
+
+
+# ----------------------------------------------------------------------
+# Engine._steps LRU pinning (satellite regression)
+# ----------------------------------------------------------------------
+def test_lru_pinning_protects_inflight_policy(tiny_cfg, tiny_params,
+                                              lib):
+    eng = Engine(tiny_cfg, tiny_params, library=lib)
+    eng._steps_max = 2
+    pinned_policy = ApproxPolicy(default=BackendSpec(
+        mode="lut", multiplier="mul8u_trunc6")).materialize(lib)
+    pinned_key = pinned_policy.cache_key()
+    with eng._pin(pinned_key):
+        eng._steps_for(pinned_policy)
+        # sweep other policies through the LRU: the pinned in-flight
+        # pair must survive where the old popitem(last=False) would
+        # have evicted it
+        for m in ("mul8u_exact", "mul8u_trunc5", "mul8u_trunc3"):
+            eng._steps_for(ApproxPolicy(default=BackendSpec(
+                mode="lut", multiplier=m)).materialize(lib))
+            assert pinned_key in eng._steps
+    # unpinned: the same sweep now evicts it
+    for m in ("mul8u_exact", "mul8u_trunc5", "mul8u_trunc3"):
+        eng._steps_for(ApproxPolicy(default=BackendSpec(
+            mode="lut", multiplier=m)).materialize(lib))
+    assert pinned_key not in eng._steps
+    assert len(eng._steps) <= 2
+    assert not eng._pinned               # generate() always unpins
+
+
+def test_lru_overshoots_rather_than_evict_pinned(tiny_cfg, tiny_params,
+                                                 lib):
+    eng = Engine(tiny_cfg, tiny_params, library=lib)
+    eng._steps_max = 1
+    pols = [ApproxPolicy(default=BackendSpec(
+        mode="lut", multiplier=m)).materialize(lib) for m in MULTS[:3]]
+    import contextlib
+    with contextlib.ExitStack() as stack:
+        for p in pols:
+            stack.enter_context(eng._pin(p.cache_key()))
+            eng._steps_for(p)
+        assert all(p.cache_key() in eng._steps for p in pols)
+        assert len(eng._steps) >= 3      # overshoot, everything pinned
+
+
+# ----------------------------------------------------------------------
+# Registry serving hooks + bank assembly
+# ----------------------------------------------------------------------
+def test_probe_layer_tags_dense(tiny_cfg, tiny_params):
+    tags = probe_layer_tags(tiny_cfg, tiny_params)
+    assert set(tags) == {"attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                         "ffn.wi", "ffn.wg", "ffn.wo"}
+
+
+def test_input_extras_and_prompt_extra_len(tiny_cfg):
+    assert input_extras(tiny_cfg, 2) == {}
+    assert prompt_extra_len(tiny_cfg, None) == 0
+
+
+def test_policy_assignment_resolves_patterns(lib):
+    layers = ("attn.wq", "attn.wo", "ffn.wi")
+    pol = ApproxPolicy(
+        default=BackendSpec(mode="lut", multiplier="mul8u_trunc5"),
+        overrides=[("attn.*", BackendSpec(mode="lut",
+                                          multiplier="mul8u_trunc6"))])
+    assert policy_assignment(pol, layers) == {
+        "attn.wq": "mul8u_trunc6", "attn.wo": "mul8u_trunc6",
+        "ffn.wi": "mul8u_trunc5"}
+    with pytest.raises(ValueError, match="block_m"):
+        policy_assignment(
+            ApproxPolicy(default=BackendSpec(mode="lut", block_m=64)),
+            layers)
+
+
+def test_policy_bank_from_policies(lib):
+    layers = ("attn.wq", "ffn.wi")
+    pols = [ApproxPolicy(default=BackendSpec(mode="lut",
+                                             multiplier=m))
+            for m in ("mul8u_trunc6", "mul8u_trunc5")]
+    pb = PolicyBank.from_policies(pols, layers, library=lib)
+    assert pb.n_policies == 2 and pb.layers == layers
+    assert pb.assignment(0) == {"attn.wq": "mul8u_trunc6",
+                                "ffn.wi": "mul8u_trunc6"}
+    assert pb.assignment(1) == {"attn.wq": "mul8u_trunc5",
+                                "ffn.wi": "mul8u_trunc5"}
+
+
+# ----------------------------------------------------------------------
+# Cross-family serving (slow: one model per registry family)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "mamba2-780m",
+                                  "whisper-large-v3", "llava-next-34b",
+                                  "jamba-v0.1-52b"])
+def test_families_serve_bit_identical(arch, lib):
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced()
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousEngine(cfg, params, library=lib,
+                           multipliers=MULTS[:3], n_slots=2,
+                           capacity=32, block_size=4)
+    rng = np.random.default_rng(2)
+    serves = [ServeConfig(max_new_tokens=4,
+                          policy=_uniform("mul8u_trunc6")),
+              ServeConfig(max_new_tokens=5,
+                          policy=_uniform("mul8u_trunc5"),
+                          temperature=0.9, seed=5),
+              ServeConfig(max_new_tokens=3, policy=None)]
+    prompts = [rng.integers(0, cfg.vocab, (int(rng.integers(3, 7)),)
+                            ).astype(np.int32) for _ in serves]
+    rids = [eng.submit(p, s) for p, s in zip(prompts, serves)]
+    out = eng.run()
+    assert eng.trace_counts["decode"] == 1
+    extras = input_extras(cfg, 1) or None
+    for p, s, rid in zip(prompts, serves, rids):
+        ref = Engine(cfg, params, eng.lane_policy(s),
+                     library=lib).generate(p[None], s, extras=extras)[0]
+        np.testing.assert_array_equal(out[rid], ref,
+                                      err_msg=f"{arch}/{rid}")
