@@ -1,0 +1,204 @@
+"""Device-resident CGP library generation benchmark (DESIGN.md §2.9).
+
+Library growth is bounded by fitness evaluation: the legacy engine
+simulates ONE candidate per ``Netlist.eval_words`` call, so the search
+spends its life in per-candidate python dispatch.  The population
+engine stacks a whole generation's offspring into flat genome arrays
+and scores them in ONE Pallas program with the error metric reduced on
+device.  This benchmark writes
+``benchmarks/results/BENCH_evolve.json`` recording:
+
+  * candidate-evals/sec of the device engine vs the sequential numpy
+    engine on the same population (the headline throughput record) —
+    the run FAILS unless the device engine clears a >= 3x speedup on
+    CPU (interpret mode; a real accelerator only widens the gap),
+  * the metric bit-identity gate: device-reduced er/mae/wce (exact
+    integer sums finished in float64) and the host-reduced fallback
+    metrics must equal the numpy engine's float64 values EXACTLY on
+    every candidate — the run FAILS otherwise,
+  * circuits/sec + archive-size-vs-wall-clock trajectory of a fused
+    ``evolve_ladder`` sweep (every rung's improved parents timestamped
+    as they are admitted),
+  * library growth at equal budget: a tiny-budget ``device``-engine
+    build must admit MORE evolved entries than the legacy build (no
+    parent thinning + composed pickup) — the run FAILS otherwise.
+
+``--quick`` (CI mode) shrinks populations and generations; every gate
+is deterministic (fixed seeds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.cgp import CgpParams, mutate, pad_nodes
+from repro.core.evolve_pop import DEVICE_METRICS, PopEvaluator, \
+    evolve_ladder
+from repro.core.library import build_default_library
+from repro.core.metrics import METRIC_NAMES
+from repro.core.seeds import array_multiplier
+
+from .common import emit
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_evolve.json")
+
+SPEEDUP_GATE = 3.0
+
+
+def _population(seed_nl, p: int, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    return [mutate(seed_nl, rng, 5) for _ in range(p)]
+
+
+def _throughput(ev: PopEvaluator, pop, iters: int) -> float:
+    """Candidate evaluations per second over ``iters`` scoring calls."""
+    ev.errors_of(pop)              # warmup (device: compile)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        ev.errors_of(pop)
+    dt = time.perf_counter() - t0
+    return len(pop) * iters / dt
+
+
+def run(quick: bool = False) -> dict:
+    pop_size = 32 if quick else 64
+    samples = 4096 if quick else 8192
+    iters = 3 if quick else 5
+    gens = 15 if quick else 60
+
+    exact = array_multiplier(8)
+    seed_nl = pad_nodes(exact, exact.n_nodes, seed=7)
+    pop = _population(seed_nl, pop_size)
+    params = CgpParams(metric="mae", e_max=256.0, search_samples=samples,
+                       seed=3)
+
+    # -- throughput: device vs sequential numpy ------------------------
+    ev_np = PopEvaluator(exact, params, engine="numpy")
+    ev_dev = PopEvaluator(exact, params, engine="device")
+    eps_np = _throughput(ev_np, pop, iters)
+    eps_dev = _throughput(ev_dev, pop, iters)
+    speedup = eps_dev / eps_np
+    emit("evolve/evals_per_s_numpy", 1e6 * pop_size / eps_np,
+         f"{eps_np:.0f}/s")
+    emit("evolve/evals_per_s_device", 1e6 * pop_size / eps_dev,
+         f"{eps_dev:.0f}/s")
+    emit("evolve/speedup", 0.0, f"{speedup:.2f}x")
+
+    # -- metric bit-identity across engines ----------------------------
+    identity = {}
+    for metric in METRIC_NAMES:
+        p_m = CgpParams(metric=metric, search_samples=samples, seed=3)
+        e_np = PopEvaluator(exact, p_m, engine="numpy").errors_of(pop)
+        e_dev = PopEvaluator(exact, p_m, engine="device").errors_of(pop)
+        identity[metric] = bool(np.array_equal(e_np, e_dev))
+    metrics_identical = all(identity.values())
+    emit("evolve/metric_identity", 0.0,
+         "exact" if metrics_identical else f"MISMATCH {identity}")
+
+    # -- fused ladder: circuits/sec + archive trajectory ---------------
+    max_out = float((2 ** 8 - 1) ** 2)
+    ladder = [max_out * (2.0 ** -e) for e in np.linspace(14, 4, 4)]
+    lp = CgpParams(metric="mae", generations=gens, search_samples=samples,
+                   seed=5)
+    trajectory = []
+    t0 = time.perf_counter()
+
+    def stamp(_run, _nl, _err, _area):
+        trajectory.append({
+            "t_s": round(time.perf_counter() - t0, 4),
+            "archive_size": len(trajectory) + 1})
+
+    ev_lad = PopEvaluator(exact, lp, engine="device")
+    results = evolve_ladder(seed_nl, exact, ladder, lp, engine="device",
+                            on_candidate=stamp, evaluator=ev_lad)
+    ladder_s = time.perf_counter() - t0
+    n_circuits = len(trajectory) + len(results)
+    emit("evolve/ladder", 1e6 * ladder_s,
+         f"{n_circuits} circuits, {n_circuits / ladder_s:.2f}/s")
+
+    # -- archive growth at equal budget --------------------------------
+    t0 = time.perf_counter()
+    lib_legacy = build_default_library("tiny")
+    legacy_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lib_dev = build_default_library("tiny", engine="device")
+    device_s = time.perf_counter() - t0
+    n_ev_legacy = len([e for e in lib_legacy.entries.values()
+                       if e.source == "evolved"])
+    n_ev_dev = len([e for e in lib_dev.entries.values()
+                    if e.source == "evolved"])
+    grew = n_ev_dev > n_ev_legacy
+    emit("evolve/library_tiny_legacy", 1e6 * legacy_s,
+         f"{len(lib_legacy.entries)} entries ({n_ev_legacy} evolved)")
+    emit("evolve/library_tiny_device", 1e6 * device_s,
+         f"{len(lib_dev.entries)} entries ({n_ev_dev} evolved)")
+
+    record = {
+        "bench": "evolve_library",
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "pop_size": pop_size,
+        "search_samples": samples,
+        "throughput": {
+            "evals_per_s_numpy": round(eps_np, 1),
+            "evals_per_s_device": round(eps_dev, 1),
+            "speedup": round(speedup, 3),
+            "gate": SPEEDUP_GATE,
+        },
+        "metric_identity": identity,
+        "device_metrics": list(DEVICE_METRICS),
+        "ladder": {
+            "rungs": len(ladder),
+            "generations": gens,
+            "wall_s": round(ladder_s, 3),
+            "circuits": n_circuits,
+            "circuits_per_s": round(n_circuits / ladder_s, 3),
+            "candidate_evals": ev_lad.n_scored,
+            "archive_vs_wall_clock": trajectory,
+        },
+        "library_tiny": {
+            "legacy": {"entries": len(lib_legacy.entries),
+                       "evolved": n_ev_legacy,
+                       "wall_s": round(legacy_s, 3)},
+            "device": {"entries": len(lib_dev.entries),
+                       "evolved": n_ev_dev,
+                       "wall_s": round(device_s, 3)},
+            "grew": grew,
+        },
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("evolve/bench_record", 0.0, BENCH_PATH)
+
+    # gates AFTER the record is on disk
+    if not metrics_identical:
+        raise SystemExit(
+            "FAIL: device engine metrics are not bit-identical to the "
+            f"numpy engine: {identity} (see {BENCH_PATH})")
+    if speedup < SPEEDUP_GATE:
+        raise SystemExit(
+            f"FAIL: device engine speedup {speedup:.2f}x is below the "
+            f"{SPEEDUP_GATE:.0f}x candidate-evals/sec gate "
+            f"(see {BENCH_PATH})")
+    if not grew:
+        raise SystemExit(
+            f"FAIL: device-engine tiny build admitted {n_ev_dev} "
+            f"evolved entries vs {n_ev_legacy} legacy — the population "
+            f"ladder must grow the archive at equal budget "
+            f"(see {BENCH_PATH})")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: smaller populations/generations")
+    args = ap.parse_args()
+    run(quick=args.quick)

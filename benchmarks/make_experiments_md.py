@@ -1,6 +1,7 @@
-"""Regenerate the §Dry-run, §Roofline, §Heterogeneous, §Wide and
-§Objectives tables of EXPERIMENTS.md from the result JSONs (idempotent;
-§Perf and prose are maintained by hand between the markers)."""
+"""Regenerate the §Dry-run, §Roofline, §Heterogeneous, §Wide,
+§Objectives, §Serve and §Evolve tables of EXPERIMENTS.md from the
+result JSONs (idempotent; §Perf and prose are maintained by hand
+between the markers)."""
 from __future__ import annotations
 
 import glob
@@ -292,6 +293,51 @@ def serve_table() -> str:
     return "\n".join(rows)
 
 
+EVOLVE_PATH = os.path.join(os.path.dirname(__file__), "results",
+                           "BENCH_evolve.json")
+
+
+def evolve_table() -> str:
+    """Device-resident library generation from BENCH_evolve.json
+    (written by `python -m benchmarks.evolve_library`)."""
+    if not os.path.exists(EVOLVE_PATH):
+        return "(run `python -m benchmarks.evolve_library` first)"
+    with open(EVOLVE_PATH) as f:
+        r = json.load(f)
+    th, lad, lib = r["throughput"], r["ladder"], r["library_tiny"]
+    ident = r["metric_identity"]
+    rows = [f"Population of {r['pop_size']} mul8 candidates scored on "
+            f"{r['search_samples']} search vectors, `{r['backend']}` "
+            f"backend{' (quick)' if r.get('quick') else ''}.", "",
+            "| engine | candidate evals/s |",
+            "|---|---|",
+            f"| numpy (sequential) | {th['evals_per_s_numpy']:.0f} |",
+            f"| device (one fused program) "
+            f"| {th['evals_per_s_device']:.0f} |", "",
+            f"Speedup **{th['speedup']:.2f}×** "
+            f"(gate ≥{th['gate']:.0f}×).  Metric bit-identity across "
+            f"engines: "
+            f"{'**exact** on all ' + str(len(ident)) + ' metrics' if all(ident.values()) else 'MISMATCH ' + str(ident)} "
+            f"(er/mae/wce reduce on device: {tuple(r['device_metrics'])}).",
+            "",
+            f"Fused e_max ladder ({lad['rungs']} rungs × "
+            f"{lad['generations']} generations, one device program per "
+            f"generation): {lad['circuits']} circuits in "
+            f"{lad['wall_s']}s ({lad['circuits_per_s']}/s, "
+            f"{lad['candidate_evals']} candidate evaluations).", "",
+            "| tiny-budget build | entries | evolved | wall s |",
+            "|---|---|---|---|",
+            f"| legacy chained ladder | {lib['legacy']['entries']} "
+            f"| {lib['legacy']['evolved']} "
+            f"| {lib['legacy']['wall_s']} |",
+            f"| device population ladder | {lib['device']['entries']} "
+            f"| {lib['device']['evolved']} "
+            f"| {lib['device']['wall_s']} |", "",
+            f"Archive growth at equal generation budget (no parent "
+            f"thinning + composed pickup): **{lib['grew']}**."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -313,6 +359,7 @@ def main() -> None:
     text = replace_section(text, "WIDE", wide_table())
     text = replace_section(text, "OBJECTIVES", objectives_table())
     text = replace_section(text, "SERVE", serve_table())
+    text = replace_section(text, "EVOLVE", evolve_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

@@ -31,6 +31,9 @@ SUITES = {
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
     "serve": ("benchmarks.serve_load",
               "continuous-batching serve load (BENCH_serve.json)"),
+    "evolve": ("benchmarks.evolve_library",
+               "device-resident CGP library generation "
+               "(BENCH_evolve.json)"),
 }
 
 # module-name aliases: every suite is addressable by its module's

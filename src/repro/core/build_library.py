@@ -1,6 +1,11 @@
 """CLI: build and persist the default approximate-circuit library.
 
     PYTHONPATH=src python -m repro.core.build_library --budget small
+
+``--engine device`` regenerates the evolved rows with the
+population-parallel generational ladder (DESIGN.md §2.9) — one fused
+device evaluation per generation, every improved feasible parent
+admitted, plus composed 12/16-bit rows over the evolved Pareto tiles.
 """
 from __future__ import annotations
 
@@ -14,11 +19,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("tiny", "small", "full"),
                     default="small")
+    ap.add_argument("--engine", choices=("legacy", "numpy", "device"),
+                    default="legacy",
+                    help="evolutionary search backend: sequential "
+                         "chained ladder ('legacy') or the "
+                         "population-parallel generational ladder "
+                         "('numpy'/'device')")
     ap.add_argument("--out", default=DEFAULT_LIBRARY_PATH)
     args = ap.parse_args()
 
     t0 = time.time()
-    lib = build_default_library(args.budget, progress=True)
+    lib = build_default_library(args.budget, progress=True,
+                                engine=args.engine)
     lib.save(args.out)
     print(f"built {len(lib.entries)} circuits in {time.time() - t0:.1f}s "
           f"-> {args.out}")

@@ -28,7 +28,9 @@ from . import gates
 from .cost import evaluate_cost
 from .metrics import (ErrorReport, error_report_from_values,
                       evaluate_errors, METRIC_NAMES)
-from .netlist import Netlist, exhaustive_inputs, pack_operands, unpack_outputs
+from .netlist import (Netlist, exhaustive_inputs, pack_operands,
+                      random_input_planes, unpack_outputs,
+                      unpack_outputs_object)
 
 
 @dataclass
@@ -51,6 +53,37 @@ class EvolvedCircuit:
     cost_power: float
 
 
+def search_planes(n_i: int, search_samples: int,
+                  rng: np.random.Generator):
+    """Search-time input sample as bit-planes: ``(planes, num)``.
+
+    Exhaustive when the 2^n_i space fits ``search_samples`` (n_i <= 24),
+    a sorted without-replacement subsample when it doesn't, and for
+    wider circuits uniform random *bit-planes* over exactly the n_i-bit
+    domain.  The plane-based wide path replaces the old 63-bit integer
+    draw, which never exercised input bits >= 63 (bit 63 of a 64-bit
+    operand pair was constant zero, and every plane past bit 63 was
+    silently dropped by the uint64 shift in ``pack_operands``).
+    """
+    space = 1 << n_i if n_i <= 24 else None
+    if space is not None and space <= search_samples:
+        vecs = np.arange(space, dtype=np.uint64)
+        return pack_operands([vecs], [n_i]), space
+    if space is not None:
+        vecs = rng.choice(space, size=search_samples, replace=False)
+        vecs = np.sort(vecs).astype(np.uint64)
+        return pack_operands([vecs], [n_i]), search_samples
+    return random_input_planes(n_i, search_samples, rng), search_samples
+
+
+def unpack_values(planes: np.ndarray, n_o: int, num: int) -> np.ndarray:
+    """Output planes -> float64 values; exact uint64 unpack for
+    n_o <= 64, big-int (object) unpack beyond that."""
+    if n_o <= 64:
+        return unpack_outputs(planes, n_o, num).astype(np.float64)
+    return unpack_outputs_object(planes, n_o, num).astype(np.float64)
+
+
 class _Evaluator:
     """Caches exact outputs; scores candidates on a fixed vector subset."""
 
@@ -61,25 +94,14 @@ class _Evaluator:
         if self.metric not in METRIC_NAMES:
             raise ValueError(f"unknown metric {self.metric}")
         rng = np.random.default_rng(params.seed + 7919)
-        space = 1 << self.n_i if self.n_i <= 24 else None
-        if space is not None and space <= params.search_samples:
-            vecs = np.arange(space, dtype=np.uint64)
-        elif space is not None:
-            vecs = rng.choice(space, size=params.search_samples, replace=False)
-            vecs = np.sort(vecs).astype(np.uint64)
-        else:
-            vecs = rng.integers(0, 1 << 63, size=params.search_samples,
-                                dtype=np.uint64)
-        self.planes = pack_operands([vecs], [self.n_i])
-        self.num = vecs.shape[0]
-        self.exact_vals = unpack_outputs(
-            exact.eval_words(self.planes), exact.n_o, self.num
-        ).astype(np.float64)
+        self.planes, self.num = search_planes(
+            self.n_i, params.search_samples, rng)
+        self.exact_vals = unpack_values(
+            exact.eval_words(self.planes), exact.n_o, self.num)
 
     def error_of(self, cand: Netlist) -> float:
-        vals = unpack_outputs(
-            cand.eval_words(self.planes), cand.n_o, self.num
-        ).astype(np.float64)
+        vals = unpack_values(
+            cand.eval_words(self.planes), cand.n_o, self.num)
         rep = error_report_from_values(vals, self.exact_vals, exhaustive=False)
         return rep.get(self.metric)
 

@@ -423,20 +423,74 @@ def _evolve_family(
     return added
 
 
+def _evolve_family_pop(
+    lib: ApproxLibrary, kind: str, width: int, exact: Netlist,
+    e_max_ladder: list[float], metric: str, generations: int, seed: int,
+    engine: str, sharding=None,
+) -> int:
+    """Population-parallel ladder (DESIGN.md §2.9): every rung of the
+    e_max ladder runs from the shared seed as one generation-synchronous
+    sweep — one fused device program per generation scores all
+    len(ladder) * λ offspring (sharded across devices when ``sharding``
+    is given).  Admits every improved feasible parent of every rung
+    plus each rung's final circuit; unlike the legacy chained ladder it
+    does NOT thin intermediate parents, which is where the extra
+    archive entries at equal generation budget come from."""
+    from .evolve_pop import evolve_ladder
+    prefix = ("mul" if kind == "multiplier" else "add") + f"{width}u_E"
+    collected: list[Netlist] = []
+
+    def keep(_run: int, nl: Netlist, err: float, area: float) -> None:
+        collected.append(nl)
+
+    params = CgpParams(metric=metric, generations=generations, seed=seed)
+    padded = pad_nodes(exact, exact.n_nodes, seed=seed + 100)
+    results = evolve_ladder(padded, exact, e_max_ladder, params,
+                            engine=engine, on_candidate=keep,
+                            sharding=sharding)
+    collected.extend(r.netlist for r in results)
+    added = 0
+    for nl in collected:
+        nl = nl.compact()
+        name = prefix + _genome_tag(nl)
+        if name in lib.entries:
+            continue
+        lib.add_netlist(nl, kind, width, "evolved", exact, name=name)
+        added += 1
+    return added
+
+
 def build_default_library(budget: str = "small",
-                          progress: bool = False) -> ApproxLibrary:
+                          progress: bool = False,
+                          engine: str = "legacy",
+                          sharding=None) -> ApproxLibrary:
     """Budgets: 'tiny' (tests, seconds), 'small' (default artifact,
-    ~minutes), 'full' (hours — the paper's scale knob)."""
+    ~minutes), 'full' (hours — the paper's scale knob).
+
+    ``engine`` picks the evolutionary search backend: 'legacy' keeps
+    the sequential chained-ladder ``cgp.evolve`` (byte-stable default
+    artifact); 'numpy' / 'device' run the population-parallel
+    generational ladder (``evolve_pop.evolve_ladder``, one fused
+    evaluation per generation — on device for 'device'), admit every
+    improved feasible parent without thinning, and additionally
+    register composed 12/16-bit rows over the evolved 8-bit Pareto
+    tiles (DESIGN.md §2.9).  ``sharding`` (a ``launch/mesh.
+    pop_sharding``) splits the fused population across devices."""
     cfg = {
         "tiny": dict(gens=40, ladder=3, mult_widths=(8,), add_widths=(8,),
-                     wide_samples=4096),
+                     wide_samples=4096, comp_tiles=1, comp_widths=(12,)),
         "small": dict(gens=250, ladder=8, mult_widths=(8, 12, 16, 32),
                       add_widths=(8, 9, 12, 16, 32, 64, 128),
-                      wide_samples=16384),
+                      wide_samples=16384, comp_tiles=2,
+                      comp_widths=(12, 16)),
         "full": dict(gens=2500, ladder=12, mult_widths=(8, 12, 16, 32),
                      add_widths=(8, 9, 12, 16, 32, 64, 128),
-                     wide_samples=65536),
+                     wide_samples=65536, comp_tiles=3,
+                     comp_widths=(12, 16)),
     }[budget]
+    if engine not in ("legacy", "numpy", "device"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'legacy', 'numpy' or 'device')")
     lib = ApproxLibrary()
 
     def log(msg: str) -> None:
@@ -466,9 +520,26 @@ def build_default_library(budget: str = "small",
             max_out = float((2 ** w - 1) ** 2)
             ladder = [max_out * (2.0 ** -e) for e in
                       np.linspace(14, 4, cfg["ladder"])]
-            n = _evolve_family(lib, "multiplier", w, exact, ladder, "mae",
-                               cfg["gens"], seed=1234)
+            if engine == "legacy":
+                n = _evolve_family(lib, "multiplier", w, exact, ladder,
+                                   "mae", cfg["gens"], seed=1234)
+            else:
+                n = _evolve_family_pop(lib, "multiplier", w, exact,
+                                       ladder, "mae", cfg["gens"],
+                                       seed=1234, engine=engine,
+                                       sharding=sharding)
             log(f"mul{w}: evolved {n}")
+
+    # composed wide rows over the freshly evolved 8-bit Pareto tiles
+    # (population engines only — the legacy build stays byte-stable)
+    if engine != "legacy":
+        front = [e for e in lib.pareto_front("multiplier", 8, "mae")
+                 if e.source == "evolved"]
+        for tile in front[:cfg["comp_tiles"]]:
+            for cw in cfg["comp_widths"]:
+                lib.add_composed(tile.name, cw, reduce="exact",
+                                 samples=cfg["wide_samples"])
+                log(f"mul{cw}: composed over {tile.name}")
 
     # ---- adders --------------------------------------------------------
     for w in cfg["add_widths"]:
@@ -486,8 +557,13 @@ def build_default_library(budget: str = "small",
             max_out = float(2 ** (w + 1) - 1)
             ladder = [max_out * (2.0 ** -e) for e in
                       np.linspace(9, 2, cfg["ladder"])]
-            n = _evolve_family(lib, "adder", w, exact, ladder, "mae",
-                               cfg["gens"], seed=4321)
+            if engine == "legacy":
+                n = _evolve_family(lib, "adder", w, exact, ladder, "mae",
+                                   cfg["gens"], seed=4321)
+            else:
+                n = _evolve_family_pop(lib, "adder", w, exact, ladder,
+                                       "mae", cfg["gens"], seed=4321,
+                                       engine=engine, sharding=sharding)
             log(f"add{w}: evolved {n}")
 
     return lib

@@ -194,6 +194,40 @@ class Netlist:
         )
 
 
+def stack_netlists(netlists: list, n_nodes: Optional[int] = None):
+    """Stack same-interface netlists into flat population arrays.
+
+    Pads every genome up to ``n_nodes`` (default: the population max)
+    with inactive ``const0`` nodes — appended past every referenced
+    index, so no output can change — and returns
+    ``(funcs, in0, in1, outs)`` int32 arrays of shapes
+    ``(P, n_nodes)``/``(P, n_o)``, the layout the population bitsim
+    kernel consumes (DESIGN.md §2.9).
+    """
+    if not netlists:
+        raise ValueError("need at least one netlist")
+    n_i, n_o = netlists[0].n_i, netlists[0].n_o
+    for nl in netlists:
+        if nl.n_i != n_i or nl.n_o != n_o:
+            raise ValueError("population interfaces must match")
+    if n_nodes is None:
+        n_nodes = max(nl.n_nodes for nl in netlists)
+    if any(nl.n_nodes > n_nodes for nl in netlists):
+        raise ValueError("n_nodes smaller than a population member")
+    p = len(netlists)
+    funcs = np.full((p, n_nodes), gates.CONST0, dtype=np.int32)
+    in0 = np.zeros((p, n_nodes), dtype=np.int32)
+    in1 = np.zeros((p, n_nodes), dtype=np.int32)
+    outs = np.zeros((p, n_o), dtype=np.int32)
+    for k, nl in enumerate(netlists):
+        n = nl.n_nodes
+        funcs[k, :n] = nl.funcs
+        in0[k, :n] = nl.in0
+        in1[k, :n] = nl.in1
+        outs[k] = nl.outputs
+    return funcs, in0, in1, outs
+
+
 # ----------------------------------------------------------------------
 # Bit packing helpers
 # ----------------------------------------------------------------------

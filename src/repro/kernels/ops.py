@@ -18,7 +18,7 @@ from .composed_matmul import (composed_matmul_bank_pallas,
                               composed_matmul_pallas)
 from .lut_bank import approx_matmul_lut_bank_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
-from .bitsim import bitsim_pallas
+from .bitsim import bitsim_pallas, bitsim_pop_pallas
 
 
 def _interpret() -> bool:
@@ -125,19 +125,49 @@ def bitsim(netlist, planes64: np.ndarray) -> np.ndarray:
     """Evaluate a ``repro.core.netlist.Netlist`` on uint64 bit-planes via
     the Pallas simulator (planes are split to uint32 lanes and rejoined).
     Drop-in equivalent of ``netlist.eval_words``."""
-    n_i, w64 = planes64.shape
-    lo = (planes64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    hi = (planes64 >> np.uint64(32)).astype(np.uint32)
-    planes32 = np.empty((n_i, 2 * w64), dtype=np.uint32)
-    planes32[:, 0::2] = lo
-    planes32[:, 1::2] = hi
     out32 = np.asarray(bitsim_pallas(
         jnp.asarray(netlist.funcs), jnp.asarray(netlist.in0),
         jnp.asarray(netlist.in1), jnp.asarray(netlist.outputs),
-        jnp.asarray(planes32),
+        jnp.asarray(split_planes64(planes64)),
         n_nodes=netlist.n_nodes, n_i=netlist.n_i, n_o=netlist.n_o,
         interpret=_interpret(),
     ))
-    out64 = (out32[:, 0::2].astype(np.uint64)
-             | (out32[:, 1::2].astype(np.uint64) << np.uint64(32)))
-    return out64
+    return join_planes32(out32)
+
+
+def split_planes64(planes64: np.ndarray) -> np.ndarray:
+    """(n, W) uint64 bit-planes -> (n, 2W) uint32 lanes, low word first
+    (the lane layout both bitsim kernels consume)."""
+    n, w64 = planes64.shape
+    lo = (planes64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (planes64 >> np.uint64(32)).astype(np.uint32)
+    planes32 = np.empty((n, 2 * w64), dtype=np.uint32)
+    planes32[:, 0::2] = lo
+    planes32[:, 1::2] = hi
+    return planes32
+
+
+def join_planes32(planes32: np.ndarray) -> np.ndarray:
+    """Inverse of ``split_planes64`` on the trailing axis (any rank)."""
+    return (planes32[..., 0::2].astype(np.uint64)
+            | (planes32[..., 1::2].astype(np.uint64) << np.uint64(32)))
+
+
+def bitsim_pop(netlists, planes64: np.ndarray) -> np.ndarray:
+    """Evaluate a population of same-interface netlists on shared
+    uint64 bit-planes in ONE Pallas program (DESIGN.md §2.9).
+
+    Returns (P, n_o, W) uint64 — row p bit-identical to
+    ``netlists[p].eval_words(planes64)``.  Mixed node counts are padded
+    with inactive const0 nodes (``stack_netlists``).
+    """
+    from repro.core.netlist import stack_netlists
+    funcs, in0, in1, outs = stack_netlists(list(netlists))
+    first = netlists[0]
+    out32 = np.asarray(bitsim_pop_pallas(
+        jnp.asarray(funcs), jnp.asarray(in0), jnp.asarray(in1),
+        jnp.asarray(outs), jnp.asarray(split_planes64(planes64)),
+        n_nodes=funcs.shape[1], n_i=first.n_i, n_o=first.n_o,
+        interpret=_interpret(),
+    ))
+    return join_planes32(out32)

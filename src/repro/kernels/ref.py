@@ -90,3 +90,18 @@ def bitsim_ref(funcs: np.ndarray, in0: np.ndarray, in1: np.ndarray,
             raise ValueError(f)
         sigs.append(r)
     return jnp.stack([sigs[int(o)] for o in out_idx])
+
+
+def bitsim_pop_ref(funcs: np.ndarray, in0: np.ndarray, in1: np.ndarray,
+                   out_idx: np.ndarray, planes: jax.Array) -> jax.Array:
+    """Population oracle: per-candidate ``bitsim_ref`` stacked.
+
+    funcs/in0/in1: (P, n_nodes); out_idx: (P, n_o); planes: (n_i, W)
+    uint32 shared.  Returns (P, n_o, W) uint32 — the reference the
+    population kernel (``bitsim_pop_pallas``) must match bit for bit.
+    """
+    return jnp.stack([
+        bitsim_ref(np.asarray(funcs[p]), np.asarray(in0[p]),
+                   np.asarray(in1[p]), np.asarray(out_idx[p]), planes)
+        for p in range(np.asarray(funcs).shape[0])
+    ])

@@ -296,6 +296,24 @@ def leading_axis_sharding(sharding: NamedSharding,
                          P(*([lead] + [None] * (rank - 1))))
 
 
+def pop_sharding(n_pop: int, mesh: Optional[Mesh] = None,
+                 axis: str = "sweep") -> NamedSharding:
+    """Sharding for the population-evolution engine's *candidate* axis —
+    the leading dim of the stacked netlist genome arrays
+    ``(n_pop, n_nodes)`` a ``PopEvaluator`` scores per generation
+    (DESIGN.md §2.9).  Pass as ``PopEvaluator(..., sharding=...)`` /
+    ``evolve_ladder(..., sharding=...)``: the input planes and exact
+    values stay replicated (every candidate simulates the same
+    vectors) while the candidate axis — and therefore the whole
+    population bitsim + on-device error reduction — splits across
+    devices via shard_map, each scoring ``n_pop / n_devices``
+    offspring.  Same divisibility policy as ``bank_sharding``:
+    non-divisible counts replicate (the evaluator pads populations to
+    a divisible multiple before applying it)."""
+    mesh = mesh if mesh is not None else sweep_mesh()
+    return NamedSharding(mesh, bank_pspec(n_pop, mesh, axis))
+
+
 def policy_sharding(n_policies: int, mesh: Optional[Mesh] = None,
                     axis: str = "sweep") -> NamedSharding:
     """Sharding for the heterogeneous engine's *policy* axis — the

@@ -1,0 +1,139 @@
+"""Differential harness for the Pallas bitsim kernels (DESIGN.md §2.9).
+
+Every test is a bit-identity check of ``bitsim_pallas`` /
+``bitsim_pop_pallas`` (interpret mode on CPU — the kernel body runs
+verbatim) against the pure-python ``Netlist.eval_words`` simulator and
+the ``ref.py`` oracles, over random valid netlists covering all 10 gate
+functions and plane widths that are NOT multiples of the kernel block.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gates
+from repro.core.netlist import Netlist, stack_netlists
+from repro.kernels import ops
+from repro.kernels.bitsim import W_BLOCK, bitsim_pop_pallas
+from repro.kernels.ref import bitsim_pop_ref, bitsim_ref
+
+
+def random_netlist(rng: np.random.Generator, n_i: int, n_o: int,
+                   n_nodes: int) -> Netlist:
+    """Random VALID netlist; with n_nodes >= N_FUNCS the first nodes
+    enumerate every gate function (identity..const1) so each draw
+    exercises the full switch table."""
+    funcs = rng.integers(0, gates.N_FUNCS, n_nodes)
+    k = min(gates.N_FUNCS, n_nodes)
+    funcs[:k] = rng.permutation(gates.N_FUNCS)[:k]
+    in0 = np.array([rng.integers(0, n_i + j) for j in range(n_nodes)])
+    in1 = np.array([rng.integers(0, n_i + j) for j in range(n_nodes)])
+    outputs = rng.integers(0, n_i + n_nodes, n_o)
+    nl = Netlist(n_i=n_i, n_o=n_o, funcs=funcs.astype(np.int32),
+                 in0=in0.astype(np.int32), in1=in1.astype(np.int32),
+                 outputs=outputs.astype(np.int32))
+    nl.validate()
+    return nl
+
+
+# uint64 plane widths: 1 word, and counts whose uint32 lane totals
+# (2, 6, 514) are not multiples of W_BLOCK — the pad/trim path
+PLANE_WORDS = (1, 3, 257)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 32), st.sampled_from(PLANE_WORDS))
+def test_bitsim_matches_eval_words(seed, w64):
+    rng = np.random.default_rng(seed)
+    n_i = int(rng.integers(1, 12))
+    n_o = int(rng.integers(1, 8))
+    n_nodes = int(rng.integers(gates.N_FUNCS, 60))
+    nl = random_netlist(rng, n_i, n_o, n_nodes)
+    planes = rng.integers(0, 2 ** 64, (n_i, w64), dtype=np.uint64)
+    got = ops.bitsim(nl, planes)
+    want = nl.eval_words(planes)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 32), st.sampled_from(PLANE_WORDS))
+def test_bitsim_pop_matches_sequential(seed, w64):
+    """Population row p must equal netlists[p].eval_words — including
+    mixed node counts (padded with inactive const0 nodes)."""
+    rng = np.random.default_rng(seed)
+    n_i = int(rng.integers(1, 10))
+    n_o = int(rng.integers(1, 6))
+    pop = [random_netlist(rng, n_i, n_o,
+                          int(rng.integers(gates.N_FUNCS, 40)))
+           for _ in range(int(rng.integers(1, 7)))]
+    planes = rng.integers(0, 2 ** 64, (n_i, w64), dtype=np.uint64)
+    got = ops.bitsim_pop(pop, planes)
+    assert got.shape == (len(pop), n_o, w64)
+    for p, nl in enumerate(pop):
+        np.testing.assert_array_equal(got[p], nl.eval_words(planes))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2 ** 32))
+def test_bitsim_pop_matches_ref_oracle(seed):
+    """Kernel vs the pure-jnp population oracle on uint32 lanes."""
+    rng = np.random.default_rng(seed)
+    n_i, n_o = int(rng.integers(2, 9)), int(rng.integers(1, 5))
+    pop = [random_netlist(rng, n_i, n_o, 24) for _ in range(4)]
+    funcs, in0, in1, outs = stack_netlists(pop)
+    planes32 = rng.integers(0, 2 ** 32, (n_i, 10), dtype=np.uint32)
+    got = bitsim_pop_pallas(
+        jnp.asarray(funcs), jnp.asarray(in0), jnp.asarray(in1),
+        jnp.asarray(outs), jnp.asarray(planes32),
+        n_nodes=funcs.shape[1], n_i=n_i, n_o=n_o, interpret=True)
+    want = bitsim_pop_ref(funcs, in0, in1, outs, jnp.asarray(planes32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_const_only_netlist():
+    """const0/const1 gates take no inputs; planes must not leak in."""
+    funcs = np.array([gates.CONST0, gates.CONST1], dtype=np.int32)
+    zeros = np.zeros(2, dtype=np.int32)
+    nl = Netlist(n_i=2, n_o=2, funcs=funcs, in0=zeros, in1=zeros,
+                 outputs=np.array([2, 3], dtype=np.int32))
+    planes = np.random.default_rng(0).integers(
+        0, 2 ** 64, (2, 1), dtype=np.uint64)
+    got = ops.bitsim(nl, planes)
+    assert got[0, 0] == 0 and got[1, 0] == np.uint64(2 ** 64 - 1)
+    got_pop = ops.bitsim_pop([nl, nl], planes)
+    np.testing.assert_array_equal(got_pop[0], got)
+    np.testing.assert_array_equal(got_pop[1], got)
+
+
+def test_pop_single_word_single_candidate():
+    """P=1, w=1: the smallest grid still pads/trims correctly."""
+    rng = np.random.default_rng(42)
+    nl = random_netlist(rng, 4, 2, 12)
+    planes = rng.integers(0, 2 ** 64, (4, 1), dtype=np.uint64)
+    np.testing.assert_array_equal(ops.bitsim_pop([nl], planes)[0],
+                                  nl.eval_words(planes))
+
+
+def test_stack_netlists_pads_with_inactive_nodes():
+    rng = np.random.default_rng(3)
+    a = random_netlist(rng, 3, 2, 10)
+    b = random_netlist(rng, 3, 2, 25)
+    funcs, in0, in1, outs = stack_netlists([a, b])
+    assert funcs.shape == (2, 25)
+    assert np.all(funcs[0, 10:] == gates.CONST0)
+    assert outs.shape == (2, 2)
+    with pytest.raises(ValueError):
+        stack_netlists([a, random_netlist(rng, 4, 2, 10)])
+    with pytest.raises(ValueError):
+        stack_netlists([])
+
+
+def test_block_boundary_widths():
+    """uint32 lane counts straddling W_BLOCK: 512±1 lanes (256 words
+    exactly hits the block; 255/257 exercise the remainder path)."""
+    rng = np.random.default_rng(9)
+    nl = random_netlist(rng, 6, 3, 30)
+    for w64 in (W_BLOCK // 2 - 1, W_BLOCK // 2, W_BLOCK // 2 + 1):
+        planes = rng.integers(0, 2 ** 64, (6, w64), dtype=np.uint64)
+        np.testing.assert_array_equal(ops.bitsim(nl, planes),
+                                      nl.eval_words(planes))

@@ -148,6 +148,82 @@ def test_pareto_archive():
     assert dominates((1, 1), (2, 2)) and not dominates((1, 2), (2, 1))
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 32))
+def test_pareto_archive_invariants(seed):
+    """Under ANY add sequence: the archive stays mutually
+    non-dominated, exact duplicates are rejected, and ``add`` returns
+    True iff the point survives into the archive."""
+    rng = np.random.default_rng(seed)
+    a = ParetoArchive()
+    for k in range(60):
+        pt = (float(rng.integers(0, 8)), float(rng.integers(0, 8)))
+        accepted = a.add(pt, k)
+        if accepted:
+            assert pt in a.points
+            assert a.payloads[a.points.index(pt)] == k
+        else:
+            assert any(dominates(q, pt) or q == pt for q in a.points)
+        # duplicates of a live point are always rejected
+        if a.points:
+            assert not a.add(a.points[0], "dup")
+        for p in a.points:
+            for q in a.points:
+                assert p is q or not dominates(p, q)
+        assert len(a.points) == len(a.payloads) == len(a)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 32), st.integers(1, 12))
+def test_mutate_respects_gene_bounds(seed, h):
+    """Every mutated gene stays a valid CGP gene: node j's inputs point
+    below n_i + j (feed-forward), outputs below n_i + n_nodes, and
+    function genes stay inside the gate table."""
+    rng = np.random.default_rng(seed)
+    nl = seeds.array_multiplier(4)
+    for _ in range(20):
+        nl = mutate(nl, rng, h)
+        n_i = nl.n_i
+        assert np.all((0 <= nl.funcs) & (nl.funcs < gates.N_FUNCS))
+        for j in range(nl.n_nodes):
+            assert 0 <= nl.in0[j] < n_i + j or (n_i + j == 0)
+            assert 0 <= nl.in1[j] < n_i + j or (n_i + j == 0)
+        assert np.all((0 <= nl.outputs)
+                      & (nl.outputs < n_i + nl.n_nodes))
+
+
+def test_search_planes_cover_all_input_bits():
+    """Regression for the >24-input operand sampler: the old 63-bit
+    integer draw left input bit 63 constant zero and silently dropped
+    every plane past bit 63.  Every bit-row of the sampled planes must
+    now toggle — including row 63 of a 64-input (32-bit adder) circuit
+    and the rows >= 64 of a 66-input one."""
+    from repro.core.cgp import search_planes
+    for n_i in (64, 66):
+        planes, num = search_planes(n_i, 8192, np.random.default_rng(0))
+        assert planes.shape[0] == n_i and num == 8192
+        for row in range(n_i):
+            assert planes[row].any(), f"bit {row} stuck at 0"
+            assert (~planes[row]).any(), f"bit {row} stuck at 1"
+    # distinct high rows must be independent draws, not copies
+    planes, _ = search_planes(66, 8192, np.random.default_rng(0))
+    assert not np.array_equal(planes[63], planes[64])
+    assert not np.array_equal(planes[64], planes[65])
+
+
+def test_evaluator_scores_wide_adder_approximations():
+    """End-to-end regression: with >24 inputs the evaluator must rank a
+    high-bit truncation as WORSE than a low-bit one — impossible while
+    the high input bits never toggled."""
+    from repro.core.cgp import CgpParams, _Evaluator
+    exact = seeds.ripple_carry_adder(32)
+    ev = _Evaluator(exact, CgpParams(metric="mae", search_samples=4096,
+                                     seed=1))
+    lo = ev.error_of(families.truncated_adder(32, 4))
+    hi = ev.error_of(families.truncated_adder(32, 28))
+    assert 0 < lo < hi
+
+
 def test_compact_preserves_function():
     nl = families.bam_multiplier(8, 1, 4)
     c = nl.compact()

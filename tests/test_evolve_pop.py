@@ -1,0 +1,137 @@
+"""Population-parallel CGP engine (DESIGN.md §2.9): engine
+determinism, metric bit-identity, fused-ladder equivalence, sharding."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cgp import CgpParams, pad_nodes
+from repro.core.evolve_pop import (DEVICE_METRICS, POP_PAD, PopEvaluator,
+                                   evolve_ladder, evolve_pop)
+from repro.core.metrics import METRIC_NAMES
+from repro.core.seeds import array_multiplier, ripple_carry_adder
+from tests.test_bitsim import random_netlist
+
+
+def _same_genome(a, b) -> bool:
+    return (np.array_equal(a.funcs, b.funcs)
+            and np.array_equal(a.in0, b.in0)
+            and np.array_equal(a.in1, b.in1)
+            and np.array_equal(a.outputs, b.outputs))
+
+
+@pytest.fixture(scope="module")
+def mult6():
+    return array_multiplier(6)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return CgpParams(metric="mae", e_max=40.0, generations=25, seed=5,
+                     search_samples=4096)
+
+
+def test_engines_walk_identical_trajectories(mult6, params):
+    """Same seed => numpy and device engines return the SAME netlist
+    and the SAME exhaustively-verified ErrorReport."""
+    seed_nl = pad_nodes(mult6, mult6.n_nodes + 10, seed=99)
+    rn = evolve_pop(seed_nl, mult6, params, engine="numpy")
+    rd = evolve_pop(seed_nl, mult6, params, engine="device")
+    assert _same_genome(rn.netlist, rd.netlist)
+    assert rn.errors.as_dict() == rd.errors.as_dict()
+    assert rn.cost_area == rd.cost_area
+    assert rn.errors.mae <= params.e_max
+
+
+@pytest.mark.parametrize("metric", METRIC_NAMES)
+def test_metric_bit_identity_across_engines(mult6, metric):
+    """Every metric — device-reduced (er/mae/wce: exact integer sums
+    finished in float64) and host-reduced fallback alike — must equal
+    the numpy engine's float64 value EXACTLY on every candidate."""
+    p = CgpParams(metric=metric, search_samples=2048, seed=3)
+    rng = np.random.default_rng(7)
+    pop = [random_netlist(rng, mult6.n_i, mult6.n_o, 80)
+           for _ in range(POP_PAD + 3)]   # odd count: padding path
+    e_np = PopEvaluator(mult6, p, engine="numpy").errors_of(pop)
+    e_dev = PopEvaluator(mult6, p, engine="device").errors_of(pop)
+    np.testing.assert_array_equal(e_np, e_dev)
+    assert e_np.shape == (len(pop),)
+
+
+def test_device_metrics_are_a_subset():
+    assert set(DEVICE_METRICS) <= set(METRIC_NAMES)
+
+
+def test_ladder_matches_per_rung_runs(mult6, params):
+    """Fused-ladder rung i is trajectory-identical to a standalone
+    evolve_pop at seed+i — the fusion must not change the search."""
+    seed_nl = pad_nodes(mult6, mult6.n_nodes + 10, seed=99)
+    ladder = [10.0, 40.0]
+    lad = evolve_ladder(seed_nl, mult6, ladder, params, engine="device")
+    for i, e_max in enumerate(sorted(ladder)):
+        p_i = replace(params, e_max=e_max, seed=params.seed + i)
+        solo = evolve_pop(seed_nl, mult6, p_i, engine="device")
+        assert _same_genome(lad[i].netlist, solo.netlist)
+        assert lad[i].errors.as_dict() == solo.errors.as_dict()
+
+
+def test_ladder_engines_agree(mult6, params):
+    seed_nl = pad_nodes(mult6, mult6.n_nodes + 10, seed=99)
+    ladder = [10.0, 40.0]
+    lad_d = evolve_ladder(seed_nl, mult6, ladder, params, engine="device")
+    lad_n = evolve_ladder(seed_nl, mult6, ladder, params, engine="numpy")
+    for a, b in zip(lad_d, lad_n):
+        assert _same_genome(a.netlist, b.netlist)
+        assert a.errors.as_dict() == b.errors.as_dict()
+
+
+def test_sharded_evaluator_matches_unsharded(mult6, params):
+    """pop_sharding on the 1-device sweep mesh must not change scores
+    (shard_map with a trivial split is the degenerate case the
+    multi-device path reduces to)."""
+    from repro.launch.mesh import pop_sharding, sweep_mesh
+    rng = np.random.default_rng(11)
+    pop = [random_netlist(rng, mult6.n_i, mult6.n_o, 60)
+           for _ in range(POP_PAD)]
+    plain = PopEvaluator(mult6, params, engine="device").errors_of(pop)
+    sh = pop_sharding(POP_PAD, sweep_mesh())
+    sharded = PopEvaluator(mult6, params, engine="device",
+                           sharding=sh).errors_of(pop)
+    np.testing.assert_array_equal(plain, sharded)
+
+
+def test_on_candidate_and_instrumentation(mult6, params):
+    seed_nl = pad_nodes(mult6, mult6.n_nodes + 10, seed=99)
+    seen = []
+    ev = PopEvaluator(mult6, params, engine="numpy")
+    evolve_pop(seed_nl, mult6, params, on_candidate=lambda nl, e, a:
+               seen.append((e, a)), evaluator=ev)
+    # 1 parent eval + λ per generation; every callback is feasible
+    assert ev.n_scored == 1 + params.generations * params.lam
+    assert ev.n_calls == 1 + params.generations
+    assert all(e <= params.e_max for e, _ in seen)
+
+
+def test_evaluator_rejects_bad_config(mult6, params):
+    with pytest.raises(ValueError, match="engine"):
+        PopEvaluator(mult6, params, engine="cuda")
+    with pytest.raises(ValueError, match="metric"):
+        PopEvaluator(mult6, replace(params, metric="nope"))
+    wide = ripple_carry_adder(40)      # n_o = 41 > device cap
+    with pytest.raises(ValueError, match="numpy"):
+        PopEvaluator(wide, params, engine="device")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2 ** 32), st.sampled_from(DEVICE_METRICS))
+def test_adder_metric_identity_property(seed, metric):
+    """Device-reduced metrics on the adder oracle (n_o=9): random
+    populations, exact equality with the numpy engine."""
+    add = ripple_carry_adder(8)
+    p = CgpParams(metric=metric, search_samples=1024, seed=seed % 997)
+    rng = np.random.default_rng(seed)
+    pop = [random_netlist(rng, add.n_i, add.n_o, 50) for _ in range(5)]
+    e_np = PopEvaluator(add, p, engine="numpy").errors_of(pop)
+    e_dev = PopEvaluator(add, p, engine="device").errors_of(pop)
+    np.testing.assert_array_equal(e_np, e_dev)

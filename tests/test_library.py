@@ -158,3 +158,95 @@ def test_decompose_reconstruction_error_bounded():
     lut = exact_mul_lut(8)
     fac = decompose_lut(lut, 1)
     assert fac.mae_vs(lut) < 1e-6
+
+
+# ------------------------------------- population-engine regeneration
+# (DESIGN.md §2.9: the library regenerated with the device engine)
+@pytest.fixture(scope="module")
+def pop_lib():
+    return build_default_library("tiny", engine="device")
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="engine"):
+        build_default_library("tiny", engine="cuda")
+
+
+@pytest.mark.slow
+def test_pop_engine_grows_archive(pop_lib, tiny_lib):
+    """At equal (tiny) budget the population ladder must admit MORE
+    evolved entries than the legacy chained ladder (no parent
+    thinning), plus composed wide rows over the evolved tiles."""
+    n_dev = len(pop_lib.select(source="evolved"))
+    n_leg = len(tiny_lib.select(source="evolved"))
+    assert n_dev > n_leg
+    comp = pop_lib.select(width=12, source="composed")
+    assert comp and all(e.composition is not None for e in comp)
+    tiles = {e.composition["tile"] for e in comp}
+    assert all(pop_lib.entries[t].source == "evolved" for t in tiles)
+
+
+@pytest.mark.slow
+def test_pop_entries_reverify_exhaustively(pop_lib):
+    """Admission re-verifies on the FULL input space: recomputing every
+    evolved entry's ErrorReport from its stored netlist must reproduce
+    the stored report exactly (search-plane scores never leak into the
+    archive)."""
+    from repro.core.metrics import evaluate_errors
+    checked = 0
+    for e in pop_lib.select(source="evolved"):
+        exact = pop_lib.entries[
+            ("mul" if e.kind == "multiplier" else "add")
+            + f"{e.width}u_exact"].netlist
+        rep = evaluate_errors(e.netlist, exact)
+        assert rep.as_dict() == e.errors.as_dict(), e.name
+        assert rep.exhaustive
+        checked += 1
+    assert checked > 20
+
+
+@pytest.mark.slow
+def test_pop_lib_save_load_roundtrip(pop_lib, tmp_path):
+    path = str(tmp_path / "pop_lib.json")
+    pop_lib.save(path)
+    lib2 = ApproxLibrary.load(path)
+    assert set(lib2.entries) == set(pop_lib.entries)
+    for name in pop_lib.entries:
+        a, b = pop_lib.entries[name], lib2.entries[name]
+        assert a.errors.as_dict() == b.errors.as_dict()
+        assert a.composition == b.composition
+        np.testing.assert_array_equal(a.netlist.funcs, b.netlist.funcs)
+
+
+@pytest.mark.slow
+def test_pop_lib_banked_sweep_smoke(pop_lib):
+    """Evolved entries of the regenerated library execute through the
+    banked all-layers resilience sweep (one compiled program)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.approx.resilience import BankableEval, all_layers_sweep
+    from repro.data.synthetic import CifarBatches
+    from repro.models import resnet
+
+    front = pop_lib.pareto_front("multiplier", 8, "mae")
+    names = ["mul8u_exact"] + [e.name for e in front
+                               if e.source == "evolved"][:3]
+    assert len(names) >= 2
+    cfg = resnet.resnet_config(8)
+    params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+    batch = next(iter(CifarBatches("test", 32, 32, seed=0)
+                      .eval_batches()))
+    images = jnp.asarray(batch["images"])
+    labels = jnp.asarray(batch["labels"])
+
+    def traceable(policy):
+        logits = resnet.forward(params, images, cfg, policy)
+        return jnp.mean((jnp.argmax(logits, -1) == labels
+                         ).astype(jnp.float32))
+
+    ev = BankableEval(fn=lambda p: float(jax.jit(
+        lambda: traceable(p))()), traceable=traceable)
+    rows = all_layers_sweep(ev, resnet.layer_mult_counts(cfg), names,
+                            pop_lib, mode="lut", batch=True)
+    assert len(rows) == len(names)
+    assert all(0.0 <= r.accuracy <= 1.0 for r in rows)
