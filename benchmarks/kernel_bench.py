@@ -1,49 +1,140 @@
-"""Kernel micro-benchmarks: exact vs LUT-gather vs low-rank approximate
-matmul (jnp lowering; the Pallas interpret path is correctness-only on
-CPU), plus the bit-parallel netlist simulator vs naive evaluation.
+"""Kernel lane: fused single-program datapath vs the two-step
+quantize→gather pipeline (DESIGN.md §2.10), spec-first.
 
-These are CPU wall-times — NOT the roofline numbers (those come from the
-dry-run cost analysis); they document the relative algorithmic weight
-of the three emulation strategies.
+For each bench shape and datapath contract the suite times the SAME
+``BackendSpec`` under ``variant="ref"`` (two-step: calibrate/quantize,
+LUT gather, dequant as separate jit-fused ops) and ``variant="fused"``
+(the whole chain inside one Pallas program plus a thin f32 epilogue),
+checks bit-identity between the two, pulls the roofline terms
+(flops / bytes accessed → operational intensity) from the compiled
+programs' cost analysis, and audits trace counts through
+``repro.launch.compile_cache.trace_audit``.
+
+The record lands in ``benchmarks/results/BENCH_kernels.json`` — the
+fallback input for ``benchmarks.roofline`` when no 512-device dry-run
+results exist — and the run FAILS (nonzero) when any variant pair
+diverges bitwise or the fused geomean speedup drops below
+``SPEEDUP_GATE``.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--quick]
+
+The bit-parallel netlist-simulator timing lane (bitsim vs numpy) rides
+along unchanged at the end.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.backend import MatmulBackend, backend_matmul
+from repro.approx.backend import backend_matmul
+from repro.approx.specs import BackendSpec
 from repro.core import seeds
-from repro.core.luts import decompose_lut, exact_mul_lut
+from repro.core.library import build_default_library
 from repro.core.netlist import exhaustive_inputs
 from repro.kernels import ops
+from repro.launch.compile_cache import trace_audit
 
 from .common import emit, time_call
 
-M, K, N = 256, 512, 256
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_kernels.json")
+
+# (M, K, N) — small-batch decode-like, wide square, and the historical
+# activation-heavy shape.  --quick drops the largest.
+SHAPES = ((4, 512, 512), (8, 1024, 1024), (256, 512, 256))
+SHAPES_QUICK = ((4, 512, 512), (8, 1024, 1024))
+
+# Acceptance gate: geomean fused-vs-two-step wall-time ratio on CPU.
+SPEEDUP_GATE = 1.2
+
+# Datapath contracts under test: (tag, multiplier name, bit_width).
+# The composed entries are registered on the tiny library below.
+CONTRACTS = (
+    ("lut8", "mul8u_trunc2", None),
+    ("composed16", "mul16u_c_mul8u_trunc6_loa4", 16),
+)
+CONTRACTS_FULL = CONTRACTS + (
+    ("composed12", "mul12u_c_mul8u_trunc2_trunc3", 12),
+)
 
 
-def run() -> None:
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
-    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
-    lut = exact_mul_lut(8)
-    fac = decompose_lut(lut, 4)
+def _library():
+    lib = build_default_library("tiny")
+    lib.add_composed("mul8u_trunc6", 16, "loa4", samples=512)
+    lib.add_composed("mul8u_trunc2", 12, "trunc3", samples=512)
+    return lib
 
-    backends = {
-        "bf16": MatmulBackend(mode="bf16"),
-        "int8": MatmulBackend(mode="int8"),
-        "lut_gather": MatmulBackend(mode="lut", lut=lut),
-        "lowrank_r4": MatmulBackend(mode="lowrank",
-                                    factors_u=np.asarray(fac.u),
-                                    factors_v=np.asarray(fac.v)),
+
+def _cost_terms(fn, x, w) -> dict:
+    """flops / bytes-accessed roofline terms from the compiled program."""
+    cost = jax.jit(fn).lower(x, w).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older per-computation form
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_ = float(cost.get("bytes accessed", 0.0) or 0.0)
+    return {"flops": flops, "bytes": bytes_,
+            "oi": (flops / bytes_) if bytes_ else 0.0}
+
+
+def _bench_pair(lib, tag, mult, bw, shape) -> dict:
+    m, k, n = shape
+    rng = np.random.default_rng(hash((tag, shape)) % 2**32)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+
+    def _fn(variant):
+        be = BackendSpec(mode="lut", multiplier=mult, variant=variant,
+                         bit_width=bw).materialize(lib)
+        return jax.jit(lambda a, b, _be=be: backend_matmul(a, b, _be))
+
+    # two_step = the Pallas quantize-then-gather pipeline the fused
+    # program replaces (same kernel family, separately programmed);
+    # the pure-jnp "ref" variant rides along as a context row.
+    ref, two_step, fused = _fn("ref"), _fn("pallas"), _fn("fused")
+    ref_out = np.asarray(ref(x, w).block_until_ready())
+    with trace_audit() as tc_two:
+        two_out = np.asarray(two_step(x, w).block_until_ready())
+    with trace_audit() as tc_fused:
+        fused_out = np.asarray(fused(x, w).block_until_ready())
+
+    bit_identical = bool(np.array_equal(two_out, fused_out)
+                         and np.array_equal(ref_out, fused_out))
+    us_ref = time_call(lambda: ref(x, w).block_until_ready())
+    us_two = time_call(lambda: two_step(x, w).block_until_ready())
+    us_fused = time_call(lambda: fused(x, w).block_until_ready())
+
+    def _spec_fn(variant):
+        be = BackendSpec(mode="lut", multiplier=mult, variant=variant,
+                         bit_width=bw).materialize(lib)
+        return lambda a, b, _be=be: backend_matmul(a, b, _be)
+
+    entry = {
+        "contract": tag,
+        "multiplier": mult,
+        "shape": f"{m}x{k}x{n}",
+        "ref_us": us_ref,
+        "two_step_us": us_two,
+        "fused_us": us_fused,
+        "speedup": us_two / us_fused,
+        "bit_identical": bit_identical,
+        "traces": {"two_step": tc_two.traced_programs,
+                   "fused": tc_fused.traced_programs},
+        "roofline": {"two_step": _cost_terms(_spec_fn("pallas"), x, w),
+                     "fused": _cost_terms(_spec_fn("fused"), x, w)},
     }
-    for name, be in backends.items():
-        fn = jax.jit(lambda a, b, _be=be: backend_matmul(a, b, _be))
-        fn(x, w).block_until_ready()
-        us = time_call(lambda: fn(x, w).block_until_ready(), iters=3)
-        emit(f"kernel/approx_matmul/{name}", us, f"{M}x{K}x{N}")
+    emit(f"kernel/fused_vs_two_step/{tag}/{m}x{k}x{n}", us_fused,
+         f"two_step={us_two:.1f}us;ref={us_ref:.1f}us;"
+         f"speedup={entry['speedup']:.2f}x;identical={bit_identical}")
+    return entry
 
+
+def _bench_bitsim() -> dict:
     # bitsim: exhaustive 8x8 multiplier eval (65 536 vectors)
     nl = seeds.array_multiplier(8)
     planes = exhaustive_inputs(16)
@@ -51,7 +142,64 @@ def run() -> None:
     emit("kernel/bitsim/numpy_bitparallel", us_np, "65536 vectors")
     us_k = time_call(lambda: ops.bitsim(nl, planes), iters=3)
     emit("kernel/bitsim/pallas_interpret", us_k, "65536 vectors")
+    return {"numpy_us": us_np, "pallas_us": us_k, "vectors": 65536}
+
+
+def run(quick: bool = False) -> dict:
+    lib = _library()
+    shapes = SHAPES_QUICK if quick else SHAPES
+    contracts = CONTRACTS if quick else CONTRACTS_FULL
+
+    entries = [_bench_pair(lib, tag, mult, bw, shape)
+               for tag, mult, bw in contracts
+               for shape in shapes]
+
+    speedups = [e["speedup"] for e in entries]
+    geomean = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+    all_identical = all(e["bit_identical"] for e in entries)
+    record = {
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "speedup_gate": SPEEDUP_GATE,
+        "geomean_speedup": geomean,
+        "bit_identical": all_identical,
+        "entries": entries,
+        "bitsim": _bench_bitsim(),
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("kernel/fused_geomean_speedup", 0.0,
+         f"{geomean:.2f}x;gate={SPEEDUP_GATE}x;identical={all_identical}")
+
+    # gates AFTER the record is on disk — CI keeps it as the triage
+    # artifact (upload-artifact if: always())
+    if not all_identical:
+        bad = [e for e in entries if not e["bit_identical"]]
+        raise AssertionError(
+            "fused datapath diverged bitwise from the two-step pipeline: "
+            + ", ".join(f"{e['contract']}@{e['shape']}" for e in bad))
+    if geomean < SPEEDUP_GATE:
+        raise AssertionError(
+            f"fused geomean speedup {geomean:.2f}x below the "
+            f"{SPEEDUP_GATE}x gate ({BENCH_PATH})")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer shapes/contracts (CI lane)")
+    ap.add_argument("--compile-cache", action="store_true",
+                    help="enable the persistent JAX compilation cache "
+                         "(launch.compile_cache) before benchmarking")
+    args = ap.parse_args()
+    if args.compile_cache:
+        from repro.launch.compile_cache import enable_compile_cache
+        enable_compile_cache()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -338,6 +338,42 @@ def evolve_table() -> str:
     return "\n".join(rows)
 
 
+KERNELS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_kernels.json")
+
+
+def kernels_table() -> str:
+    """Fused-vs-two-step kernel lane from BENCH_kernels.json (written
+    by `python -m benchmarks.kernel_bench`)."""
+    if not os.path.exists(KERNELS_PATH):
+        return "(run `python -m benchmarks.kernel_bench` first)"
+    with open(KERNELS_PATH) as f:
+        r = json.load(f)
+    rows = [f"Fused quantize→gather→accumulate→dequant datapath vs the "
+            f"two-step Pallas pipeline, `{r['backend']}` backend"
+            f"{' (quick)' if r.get('quick') else ''}.  Every pair is "
+            f"checked for BIT-identity before timing.", "",
+            "| contract | shape | two-step µs | fused µs | speedup | "
+            "OI two-step | OI fused | identical |",
+            "|---|---|---|---|---|---|---|---|"]
+    for e in r["entries"]:
+        rows.append(
+            f"| {e['contract']} | {e['shape']} "
+            f"| {e['two_step_us']:.0f} | {e['fused_us']:.0f} "
+            f"| {e['speedup']:.2f}× "
+            f"| {e['roofline']['two_step']['oi']:.3f} "
+            f"| {e['roofline']['fused']['oi']:.3f} "
+            f"| {e['bit_identical']} |")
+    bs = r["bitsim"]
+    rows += ["",
+             f"Geomean speedup **{r['geomean_speedup']:.2f}×** "
+             f"(gate ≥{r['speedup_gate']}×), bit-identical across all "
+             f"entries: **{r['bit_identical']}**.  Bitsim lane: numpy "
+             f"{bs['numpy_us']:.0f}µs vs Pallas-interpret "
+             f"{bs['pallas_us']:.0f}µs over {bs['vectors']} vectors."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -360,6 +396,7 @@ def main() -> None:
     text = replace_section(text, "OBJECTIVES", objectives_table())
     text = replace_section(text, "SERVE", serve_table())
     text = replace_section(text, "EVOLVE", evolve_table())
+    text = replace_section(text, "KERNELS", kernels_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

@@ -1,7 +1,14 @@
 """Roofline summary (deliverable g): reads the dry-run JSONs and prints
 the per-cell three-term roofline table.  The dry-run itself
 (repro.launch.dryrun) must have been run first — it needs the
-512-device placeholder env and therefore lives in its own process."""
+512-device placeholder env and therefore lives in its own process.
+
+When no dry-run results exist, the suite falls back to the kernel
+lane's cost-analysis terms (``BENCH_kernels.json``, written by
+``benchmarks.kernel_bench``): per-shape flops / bytes-accessed /
+operational intensity for the fused and two-step datapaths, so
+``--only roofline`` produces a real table on any machine instead of a
+NO_RESULTS stub."""
 from __future__ import annotations
 
 import glob
@@ -11,6 +18,8 @@ import os
 from .common import emit
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+KERNELS_JSON = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_kernels.json")
 
 
 def load_results() -> list[dict]:
@@ -21,11 +30,34 @@ def load_results() -> list[dict]:
     return out
 
 
+def _run_kernel_fallback() -> bool:
+    """Kernel-lane roofline terms when the 512-device dry-run is absent."""
+    if not os.path.exists(KERNELS_JSON):
+        return False
+    with open(KERNELS_JSON) as f:
+        record = json.load(f)
+    for e in record.get("entries", []):
+        for variant in ("two_step", "fused"):
+            rf = e.get("roofline", {}).get(variant)
+            if not rf:
+                continue
+            us = e.get(f"{variant}_us", 0.0)
+            emit(f"roofline/kernel/{e['contract']}/{e['shape']}/{variant}",
+                 us,
+                 f"flops={rf['flops']:.3e};bytes={rf['bytes']:.3e};"
+                 f"oi={rf['oi']:.4f};"
+                 f"achieved_gflops={rf['flops'] / max(us, 1e-9) * 1e-3:.2f}")
+    return True
+
+
 def run() -> None:
     results = load_results()
     if not results:
+        if _run_kernel_fallback():
+            return
         emit("roofline/NO_RESULTS", 0.0,
-             "run benchmarks/run_dryrun_sweep.sh first")
+             "run benchmarks/run_dryrun_sweep.sh or "
+             "benchmarks.kernel_bench first")
         return
     for r in results:
         tag = f"{r['arch']}/{r['shape']}/{'mp' if r['multi_pod'] else 'sp'}"

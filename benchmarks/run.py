@@ -48,7 +48,15 @@ def main() -> None:
                     help="comma-separated suite names (canonical keys "
                          f"{list(SUITES)} or module-name aliases "
                          f"{sorted(set(ALIASES) - set(SUITES))})")
+    ap.add_argument("--compile-cache", action="store_true",
+                    help="enable the persistent JAX compilation cache "
+                         "(repro.launch.compile_cache) so repeated "
+                         "invocations skip XLA recompiles")
     args = ap.parse_args()
+    if args.compile_cache:
+        from repro.launch.compile_cache import enable_compile_cache
+        print(f"# compile cache: {enable_compile_cache()}",
+              file=sys.stderr)
     todo = (args.only.split(",") if args.only else list(SUITES))
     todo = list(dict.fromkeys(ALIASES.get(k, k) for k in todo))
 

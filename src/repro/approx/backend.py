@@ -148,6 +148,12 @@ def _from_legacy(be: MatmulBackend) -> MaterializedBackend:
 # ----------------------------------------------------------------------
 def _quantized_matmul(x2d: jax.Array, w: jax.Array,
                       backend: MaterializedBackend) -> jax.Array:
+    dp = backend.datapath
+    if getattr(dp, "fused", False):
+        # single-program datapath (DESIGN.md §2.10): calibration,
+        # quantization, gather, accumulation and dequant all live in
+        # the datapath's one fused kernel — hand it the float operands.
+        return dp.forward_fused(x2d, w, backend.consts)
     # operand width of the emulated datapath (8 for the paper's
     # baseline; 12/16 for composed wide entries, DESIGN.md §2.6).  May
     # be a traced per-lane scalar inside a mixed-width banked eval.
@@ -158,7 +164,6 @@ def _quantized_matmul(x2d: jax.Array, w: jax.Array,
     qw = quantize(w, qp_w)
     za, zw = qp_a.zero_point, qp_w.zero_point
     k = x2d.shape[1]
-    dp = backend.datapath
     s = dp.forward_q(qa, qw, backend.consts)
     if dp.exact_int32:
         # exact datapath: Σ (qa-za)(qw-zw) with int32 accumulation
@@ -171,7 +176,16 @@ def _quantized_matmul(x2d: jax.Array, w: jax.Array,
         row = jnp.sum(qa, axis=1, dtype=jnp.int32).astype(jnp.float32)
         col = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
         zaf, zwf = za.astype(jnp.float32), zw.astype(jnp.float32)
-        acc = s - zwf * row[:, None] - zaf * col[None, :] + k * zaf * zwf
+        # trunc is an exact identity on these integer-valued products
+        # but pins each one to its own f32 rounding, so XLA/LLVM cannot
+        # contract mul+sub into a single-rounding FMA — without it the
+        # result depends on the surrounding compilation context and the
+        # variants stop being bit-identical (see kernels/fused_matmul
+        # ``_dequant`` for the full rationale).
+        t_row = jnp.trunc(zwf * row[:, None])
+        t_col = jnp.trunc(zaf * col[None, :])
+        t_k = jnp.trunc(k * zaf * zwf)
+        acc = s - t_row - t_col + t_k
     return acc * (qp_a.scale * qp_w.scale)
 
 

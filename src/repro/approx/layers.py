@@ -144,8 +144,8 @@ EXACT_POLICY = ApproxPolicy(default=MatmulBackend(mode="f32"))
 # (DESIGN.md §2.4)
 # ----------------------------------------------------------------------
 def _bank_lane_backend(lut: jax.Array, bank: LutBank, mode: str,
-                       variant: str, mask=None,
-                       bits=None) -> MaterializedBackend:
+                       variant: str, mask=None, bits=None,
+                       reduce_code=None) -> MaterializedBackend:
     """Backend for ONE vmap lane: a ``mode``-datapath backend whose LUT
     const is a traced ``(256, 256)`` slice of the bank (any datapath
     declaring ``bankable`` consumes ``consts['lut']`` this way).
@@ -158,7 +158,10 @@ def _bank_lane_backend(lut: jax.Array, bank: LutBank, mode: str,
     lane's traced ``bits`` (quantization width) and 2W-bit product
     ``mask`` (0 = narrow lane) plus the bank's static reduction tree,
     so one compiled program mixes 8-bit and composed 12/16-bit lanes
-    (DESIGN.md §2.6)."""
+    (DESIGN.md §2.6).  Under the ``fused`` variant the lane's traced
+    ``reduce_code`` rides along too — the fused composed kernel takes
+    the reduction tree as runtime data, which is what lets a
+    mixed-reduce bank compile to one program (DESIGN.md §2.10)."""
     dp = get_datapath(mode if variant == "ref" else f"{mode}_{variant}")
     spec = BackendSpec(mode=mode, multiplier="<bank>",
                        block_m=bank.block_m, ste=False, variant=variant)
@@ -167,7 +170,20 @@ def _bank_lane_backend(lut: jax.Array, bank: LutBank, mode: str,
         from repro.core.families import parse_reduce
         consts.update(composed=True, bits=bits, mask=mask,
                       reduce=parse_reduce(bank.reduce))
+        if reduce_code is not None:
+            consts["reduce_code"] = reduce_code
     return MaterializedBackend(spec=spec, datapath=dp, consts=consts)
+
+
+def _check_bank_variant(bank: LutBank, variant: str) -> None:
+    """A mixed-reduce bank encodes per-lane shift/add trees, which only
+    the runtime-tree fused engines can select inside one program; the
+    static-tree variants would silently run every lane under one tree."""
+    if bank.is_mixed_reduce and variant != "fused":
+        raise ValueError(
+            f"bank mixes reduction trees ({sorted(set(bank.reduces))}); "
+            f"the {variant!r} variant compiles one static tree — run "
+            "mixed-reduce banks under variant='fused'")
 
 
 def _lane_sharding(sharding):
@@ -225,24 +241,28 @@ def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
         return ApproxPolicy(default=base,
                             overrides=[(layer_pattern, mb)])
 
+    _check_bank_variant(bank, variant)
     if bank.any_wide:
         # mixed-width bank: per-lane quantization width + product mask
-        # (selector + 2W-bit truncation) ride the vmapped axis
-        # (DESIGN.md §2.6)
+        # (selector + 2W-bit truncation) and reduce code ride the
+        # vmapped axis (DESIGN.md §2.6, §2.10)
         bits = jnp.asarray(bank.lane_bits, jnp.int32)
         masks = jnp.asarray(bank.lane_masks, jnp.uint32)
+        codes = jnp.asarray(bank.lane_reduce_codes, jnp.int32)
         if sharding is not None:
             aux = _lane_sharding(sharding)
             if aux is not None:
                 bits = jax.device_put(bits, aux)
                 masks = jax.device_put(masks, aux)
+                codes = jax.device_put(codes, aux)
 
-        def lane_w(lut, lane_bits, lane_mask):
+        def lane_w(lut, lane_bits, lane_mask, lane_code):
             mb = _bank_lane_backend(lut, bank, mode, variant,
-                                    mask=lane_mask, bits=lane_bits)
+                                    mask=lane_mask, bits=lane_bits,
+                                    reduce_code=lane_code)
             return fn(policy_for(mb))
 
-        return jax.jit(jax.vmap(lane_w))(luts, bits, masks)
+        return jax.jit(jax.vmap(lane_w))(luts, bits, masks, codes)
 
     def lane(lut):
         return fn(policy_for(_bank_lane_backend(lut, bank, mode,
@@ -253,7 +273,8 @@ def bank_eval(fn, bank: LutBank, *, mode: str = "lut",
 
 def bank_assignment_overrides(bank: LutBank, luts, assign_row, layers,
                               *, mode: str = "lut", variant: str = "ref",
-                              lane_bits=None, lane_masks=None
+                              lane_bits=None, lane_masks=None,
+                              lane_codes=None
                               ) -> list[tuple[str, MaterializedBackend]]:
     """Traced per-layer policy overrides for ONE lane of a banked
     program: layer ``layers[j]`` runs a backend whose LUT const is the
@@ -269,12 +290,15 @@ def bank_assignment_overrides(bank: LutBank, luts, assign_row, layers,
         lut = jnp.take(luts, assign_row[j], axis=0)       # (256,256)
         if bank.any_wide:
             # width-generic: each layer gathers its multiplier's
-            # quantization width + product mask alongside the tile LUT
-            # (DESIGN.md §2.6)
+            # quantization width + product mask (and, for the fused
+            # variant, reduce code) alongside the tile LUT
+            # (DESIGN.md §2.6, §2.10)
             mb = _bank_lane_backend(
                 lut, bank, mode, variant,
                 mask=jnp.take(lane_masks, assign_row[j]),
-                bits=jnp.take(lane_bits, assign_row[j]))
+                bits=jnp.take(lane_bits, assign_row[j]),
+                reduce_code=(None if lane_codes is None else
+                             jnp.take(lane_codes, assign_row[j], axis=0)))
         else:
             mb = _bank_lane_backend(lut, bank, mode, variant)
         overrides.append((layer, mb))
@@ -335,16 +359,19 @@ def policy_bank_eval(fn, pbank: PolicyBank, *, mode: str = "lut",
         assign = jax.device_put(assign, assign_sharding)
     if base is None:
         base = BackendSpec.golden().materialize()
+    _check_bank_variant(pbank.bank, variant)
     any_wide = pbank.bank.any_wide
     bank_bits = jnp.asarray(pbank.bank.lane_bits, jnp.int32)
     bank_masks = jnp.asarray(pbank.bank.lane_masks, jnp.uint32)
+    bank_codes = jnp.asarray(pbank.bank.lane_reduce_codes, jnp.int32)
 
     def lane(assign_row):
         overrides = bank_assignment_overrides(
             pbank.bank, luts, assign_row, pbank.layers,
             mode=mode, variant=variant,
             lane_bits=bank_bits if any_wide else None,
-            lane_masks=bank_masks if any_wide else None)
+            lane_masks=bank_masks if any_wide else None,
+            lane_codes=bank_codes if any_wide else None)
         policy = ApproxPolicy(default=base, overrides=overrides)
         return fn(policy)
 

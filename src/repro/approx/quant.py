@@ -86,6 +86,20 @@ def calibrate(x: jax.Array, bits: Bits = 8,
     return QuantParams(scale=scale, zero_point=zp, qmax=qmax)
 
 
+def scalar_params(qp_a: QuantParams, qp_w: QuantParams) -> tuple:
+    """The flat ``(sa, za, sw, zw, qmax)`` scalar tuple an operand pair
+    hands to the fused kernels (DESIGN.md §2.10) — calibration happens
+    OUTSIDE the kernel (cheap min/max over each operand, traced-width
+    select included), the per-tile quantize/dequant arithmetic inside.
+    Both operands share one ``qmax`` because they share ``bits``.  Each
+    scalar batches independently under ``vmap`` (mixed-width banks batch
+    every entry; a shared-activation bank batches only the weight-side
+    pair), which is what lets the fused ops' bank-collapse rules keep
+    shared operands unbatched."""
+    return (qp_a.scale, qp_a.zero_point, qp_w.scale, qp_w.zero_point,
+            qp_a.qmax)
+
+
 def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
     q = jnp.round(x.astype(jnp.float32) / qp.scale) + qp.zero_point
     return jnp.clip(q, 0, qp.qmax).astype(jnp.int32)

@@ -49,6 +49,11 @@ class Datapath:
     name: str = "?"
     exact_int32: bool = False
     needs_library: bool = True
+    # True for single-program datapaths (DESIGN.md §2.10): the backend
+    # hands them the FLOAT operands via ``forward_fused(x2d, w, consts)``
+    # and they calibrate/quantize/gather/dequant inside one kernel —
+    # ``forward_q`` (codes in, raw sums out) is never called.
+    fused: bool = False
     # spec fields this datapath actually reads in pack()/forward_q();
     # fields outside this set are canonicalized away in cache keys so
     # equivalent configurations share one materialization + jit trace.
@@ -80,7 +85,7 @@ def register_datapath(name: str) -> Callable[[type], type]:
 
 
 def get_datapath(name: str) -> Datapath:
-    if name not in _REGISTRY and name.endswith("_pallas"):
+    if name not in _REGISTRY and name.endswith(("_pallas", "_fused")):
         # Pallas variants live in the kernel layer; import on demand.
         import repro.kernels.datapaths  # noqa: F401  (registers on import)
     if name not in _REGISTRY:
@@ -214,6 +219,50 @@ def composed_reduce(pp00, pp01, pp10, pp11, reduce: tuple) -> jax.Array:
     s1 = reduce_apply(pp01, pp10, reduce)
     s2 = reduce_apply(pp00, s1 << 8, reduce)
     return reduce_apply(s2, pp11 << 16, reduce)
+
+
+#: Order fixing the integer encoding of reduction kinds for the fused
+#: kernels (``encode_reduce``); index == wire value.
+REDUCE_KINDS = ("exact", "trunc", "loa")
+
+
+def encode_reduce(reduce: tuple) -> tuple[int, int]:
+    """A parsed ``(kind, k)`` reduction as two small ints — the runtime
+    encoding the fused kernels consume (DESIGN.md §2.10).  Making the
+    adder family DATA instead of a static kernel parameter is what
+    collapses per-reduce program splits: one compiled fused program
+    serves every adder family, so mixed-reduce banks stay O(1)."""
+    kind, k = reduce
+    if kind not in REDUCE_KINDS:
+        raise ValueError(f"unknown reduction kind {kind!r}")
+    return (REDUCE_KINDS.index(kind), int(k))
+
+
+def reduce_apply_dyn(a: jax.Array, b: jax.Array, kind: jax.Array,
+                     k: jax.Array) -> jax.Array:
+    """``reduce_apply`` with the reduction selected by runtime scalars
+    ``(kind, k)`` (see ``encode_reduce``).  All three adder families are
+    computed and selected — integer ops, so each branch's value is
+    bit-identical to its static sibling (the price is ~3x the adder
+    ALU work, negligible next to the digit-product gathers)."""
+    kind = jnp.asarray(kind, jnp.int32)
+    k = jnp.asarray(k, jnp.uint32)
+    exact = a + b
+    hs = ((a >> k) + (b >> k))
+    trunc = hs << k
+    km = jnp.maximum(k, jnp.uint32(1))       # loa guard: k >= 1 by parse
+    mask = (jnp.uint32(1) << km) - jnp.uint32(1)
+    carry = (a >> (km - 1)) & (b >> (km - 1)) & jnp.uint32(1)
+    loa = ((a | b) & mask) | ((hs + carry) << k)
+    return jnp.where(kind == 0, exact, jnp.where(kind == 1, trunc, loa))
+
+
+def composed_reduce_dyn(pp00, pp01, pp10, pp11, kind, k) -> jax.Array:
+    """``composed_reduce`` with a runtime-selected adder family — the
+    same shift/add tree, every node through ``reduce_apply_dyn``."""
+    s1 = reduce_apply_dyn(pp01, pp10, kind, k)
+    s2 = reduce_apply_dyn(pp00, s1 << 8, kind, k)
+    return reduce_apply_dyn(s2, pp11 << 16, kind, k)
 
 
 def product_mask(bits) -> jax.Array:

@@ -27,7 +27,7 @@ import numpy as np
 from .registry import Datapath, get_datapath
 
 _EXACT_MODES = ("f32", "bf16")
-_VARIANTS = ("ref", "pallas")
+_VARIANTS = ("ref", "pallas", "fused")
 
 
 @dataclass(frozen=True)
@@ -273,6 +273,12 @@ class LutBank:
     block_m: int = 512
     bit_widths: Optional[tuple[int, ...]] = None   # None = all 8-bit
     reduce: str = "exact"
+    #: Per-lane reduction trees (DESIGN.md §2.10).  ``None`` means every
+    #: wide lane shares the static ``reduce`` (the historical contract
+    #: the static-tree banked engines compile).  A tuple records each
+    #: lane's own tree; only the ``fused`` variant can evaluate such a
+    #: bank in one program (its kernel takes the tree as runtime data).
+    reduces: Optional[tuple[str, ...]] = None
 
     def __post_init__(self):
         if self.luts.ndim != 3 or self.luts.shape[1:] != (256, 256):
@@ -294,10 +300,34 @@ class LutBank:
                 raise ValueError(
                     f"unsupported lane widths {bad}; banked engines "
                     f"run per-lane widths from {TRACED_WIDTHS}")
+        if self.reduces is not None and len(self.reduces) != len(self.names):
+            raise ValueError("one reduce per lane required")
 
     @property
     def n_mult(self) -> int:
         return len(self.names)
+
+    @property
+    def is_mixed_reduce(self) -> bool:
+        """True when lanes carry more than one distinct reduction tree
+        — only the runtime-tree ``fused`` engines can bank such a set."""
+        if self.reduces is None:
+            return False
+        from repro.core.families import parse_reduce
+        return len({parse_reduce(r) for r in self.reduces}) > 1
+
+    @property
+    def lane_reduce_codes(self) -> np.ndarray:
+        """(n_mult, 2) int32 ``encode_reduce`` codes, one per lane (the
+        runtime reduction selectors of the fused composed kernels;
+        uniform banks repeat the shared ``reduce``)."""
+        from repro.core.families import parse_reduce
+
+        from .registry import encode_reduce
+        rs = (self.reduces if self.reduces is not None
+              else (self.reduce,) * self.n_mult)
+        return np.asarray([encode_reduce(parse_reduce(r)) for r in rs],
+                          dtype=np.int32)
 
     @property
     def lane_bits(self) -> np.ndarray:
@@ -329,12 +359,15 @@ class LutBank:
                            block_m=self.block_m, variant=variant)
 
     @staticmethod
-    def from_library(names, library=None, block_m: int = 512) -> "LutBank":
+    def from_library(names, library=None, block_m: int = 512,
+                     mixed_reduce: bool = False) -> "LutBank":
         """Pack a (possibly mixed-width) candidate set: 8-bit entries
         contribute their own LUT, composed wide entries their tile's.
-        Raises when wide lanes disagree on the reduction tree (one
-        bank compiles ONE static tree) — split such sweeps into one
-        bank per reduction."""
+        By default raises when wide lanes disagree on the reduction
+        tree (the static-tree banked engines compile ONE shift/add
+        tree) — split such sweeps into one bank per reduction, or pass
+        ``mixed_reduce=True`` to record per-lane trees for the runtime-
+        tree ``fused`` engines (DESIGN.md §2.10)."""
         from repro.core.families import parse_reduce
         if library is None:
             from repro.core.library import get_default_library
@@ -355,17 +388,24 @@ class LutBank:
             if comp is not None:
                 reduces[n] = comp["reduce"]
         reduce = "exact"
+        per_lane: Optional[tuple] = None
         if reduces:
             parsed = {parse_reduce(r) for r in reduces.values()}
             if len(parsed) > 1:
-                raise ValueError(
-                    "mixed reduction trees in one bank: "
-                    f"{sorted(set(reduces.values()))} — a banked sweep "
-                    "compiles one static shift/add tree; sweep each "
-                    "reduction family in its own bank")
-            reduce = next(iter(reduces.values()))
+                if not mixed_reduce:
+                    raise ValueError(
+                        "mixed reduction trees in one bank: "
+                        f"{sorted(set(reduces.values()))} — a banked "
+                        "sweep compiles one static shift/add tree; "
+                        "sweep each reduction family in its own bank, "
+                        "or pass mixed_reduce=True to bank them "
+                        "through the runtime-tree fused engines")
+                per_lane = tuple(reduces.get(n, "exact") for n in names)
+            else:
+                reduce = next(iter(reduces.values()))
         return LutBank(names=names, luts=np.stack(luts), block_m=block_m,
-                       bit_widths=tuple(widths), reduce=reduce)
+                       bit_widths=tuple(widths), reduce=reduce,
+                       reduces=per_lane)
 
 
 # ----------------------------------------------------------------------
@@ -525,19 +565,22 @@ _BANK_CACHE: "OrderedDict[tuple, LutBank]" = OrderedDict()
 _BANK_CACHE_MAX = 16
 
 
-def bank_for(names, library=None, block_m: int = 512) -> LutBank:
+def bank_for(names, library=None, block_m: int = 512,
+             mixed_reduce: bool = False) -> LutBank:
     """LRU-cached ``LutBank.from_library``: repeated sweeps over the
     same candidate set (all-layers then per-layer, or explore() called
     twice) reuse one packed bank instead of restacking LUTs."""
     if library is None:
         from repro.core.library import get_default_library
         library = get_default_library()
-    key = (_library_key(library), tuple(names), int(block_m))
+    key = (_library_key(library), tuple(names), int(block_m),
+           bool(mixed_reduce))
     hit = _BANK_CACHE.get(key)
     if hit is not None:
         _BANK_CACHE.move_to_end(key)
         return hit
-    bank = LutBank.from_library(names, library, block_m=block_m)
+    bank = LutBank.from_library(names, library, block_m=block_m,
+                                mixed_reduce=mixed_reduce)
     _BANK_CACHE[key] = bank
     while len(_BANK_CACHE) > _BANK_CACHE_MAX:
         _BANK_CACHE.popitem(last=False)

@@ -11,10 +11,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.approx.registry import (MAX_COMPOSED_K, Datapath, pack_lowrank,
-                                   pack_lut, register_datapath)
+from repro.approx.quant import calibrate, scalar_params
+from repro.approx.registry import (MAX_COMPOSED_K, Datapath, encode_reduce,
+                                   pack_lowrank, pack_lut,
+                                   register_datapath)
 
-from .ops import approx_matmul_lut, composed_matmul_lut, lowrank_matmul
+from .ops import (approx_matmul_lut, composed_matmul_lut,
+                  fused_composed_matmul_lut, fused_matmul_lut,
+                  lowrank_matmul)
 
 
 @register_datapath("lut_pallas")
@@ -47,6 +51,54 @@ class LutPallasDatapath(Datapath):
                                        consts["mask"],
                                        reduce=consts["reduce"])
         return approx_matmul_lut(qa, qw, jnp.asarray(consts["lut"]))
+
+
+@register_datapath("lut_fused")
+class LutFusedDatapath(Datapath):
+    """Single-program LUT emulation (DESIGN.md §2.10): the backend hands
+    this datapath the FLOAT operands and the whole
+    quantize → LUT-gather → int32-accumulate → correct/dequant chain
+    runs as ONE ``pallas_call`` (plus the thin f32 epilogue), instead of
+    the two-step quantize-then-``forward_q`` pipeline.  Bit-identical to
+    ``lut``/``lut_pallas`` at every width by the fused kernels'
+    differential contract (``tests/test_fused_matmul.py``).
+
+    Bankable: the fused ops' custom batching rules collapse a vmapped
+    LUT axis into the banked fused kernels, and — beyond the static-tree
+    banked engines — the composed fused kernel takes the reduction tree
+    as RUNTIME data (``reduce_code``), so one compiled program can mix
+    reduction families across bank lanes (``LutBank.mixed_reduce``)."""
+
+    spec_fields = ("multiplier", "bit_width", "reduce_adder")
+    bankable = True
+    fused = True
+
+    def pack(self, spec, library) -> dict:
+        return pack_lut(spec, library)
+
+    def forward_fused(self, x2d, w, consts):
+        bits = consts.get("bits", 8)
+        qp_a = calibrate(x2d, bits=bits)
+        qp_w = calibrate(w, bits=bits)
+        sp = scalar_params(qp_a, qp_w)
+        if consts.get("composed"):
+            if x2d.shape[-1] > MAX_COMPOSED_K:
+                raise ValueError(
+                    f"K={x2d.shape[-1]} exceeds int32-safe composed "
+                    f"limb accumulation bound {MAX_COMPOSED_K}")
+            rcode = consts.get("reduce_code")
+            if rcode is None:
+                rcode = jnp.asarray(encode_reduce(consts["reduce"]),
+                                    jnp.int32)
+            return fused_composed_matmul_lut(
+                x2d, w, jnp.asarray(consts["lut"]),
+                jnp.asarray(consts["mask"], jnp.uint32), rcode, *sp)
+        return fused_matmul_lut(x2d, w, jnp.asarray(consts["lut"]), *sp)
+
+    def forward_q(self, qa, qw, consts):
+        raise TypeError(
+            "lut_fused is a fused datapath: the backend routes float "
+            "operands through forward_fused, never quantized codes")
 
 
 @register_datapath("lowrank_pallas")

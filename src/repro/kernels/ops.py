@@ -16,6 +16,9 @@ import numpy as np
 from .approx_matmul import approx_matmul_lut_pallas
 from .composed_matmul import (composed_matmul_bank_pallas,
                               composed_matmul_pallas)
+from .fused_matmul import (fused_composed_matmul_bank_pallas,
+                           fused_composed_matmul_pallas,
+                           fused_matmul_bank_pallas, fused_matmul_pallas)
 from .lut_bank import approx_matmul_lut_bank_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
 from .bitsim import bitsim_pallas, bitsim_pop_pallas
@@ -113,6 +116,102 @@ def composed_matmul_lut(qa: jax.Array, qw: jax.Array, lut: jax.Array,
     ``mask == 0`` selects the plain 8-bit tile sum instead."""
     return _composed_op(tuple(reduce))(
         qa, qw, lut, jnp.asarray(mask, jnp.uint32))
+
+
+def _bcast(v, batched: bool, axis_size: int):
+    v = jnp.asarray(v)
+    return v if batched else jnp.broadcast_to(v, (axis_size,) + v.shape)
+
+
+@jax.custom_batching.custom_vmap
+def fused_matmul_lut(x: jax.Array, w: jax.Array, lut: jax.Array,
+                     sa, za, sw, zw, qmax) -> jax.Array:
+    """Fused 8-bit approximate matmul on FLOAT operands: in-kernel
+    quantize (pre-calibrated scalars from ``quant.scalar_params``),
+    LUT gather, int32 accumulation, f32 correction + dequant — one
+    Pallas program, bit-identical to the two-step pipeline
+    (DESIGN.md §2.10).  (M,K)x(K,N) -> (M,N) f32.
+
+    Like ``approx_matmul_lut``, a custom batching rule reroutes a vmap
+    over (lut, scalars) to the banked fused kernel so bank sweeps stay
+    one launch; batched weights keep the native rule."""
+    return fused_matmul_pallas(x, w, lut, sa, za, sw, zw, qmax,
+                               interpret=_interpret())
+
+
+@fused_matmul_lut.def_vmap
+def _fused_matmul_lut_vmap(axis_size, in_batched, x, w, lut,
+                           sa, za, sw, zw, qmax):
+    x_b, w_b, lut_b = in_batched[:3]
+    if w_b:
+        # batched weights (experts) are not a LUT bank: native rule
+        out = jax.vmap(
+            lambda *a: fused_matmul_pallas(*a, interpret=_interpret()),
+            in_axes=tuple(0 if b else None for b in in_batched),
+        )(x, w, lut, sa, za, sw, zw, qmax)
+        return out, True
+    luts = _bcast(lut, lut_b, axis_size)
+    scalars = [_bcast(v, b, axis_size)
+               for v, b in zip((sa, za, sw, zw, qmax), in_batched[3:])]
+    # x stays SHARED (M,K) when unbatched — the banked kernel grids over
+    # the lane axis and re-quantizes the shared tile per lane.
+    out = fused_matmul_lut_bank(x, w, luts, *scalars)
+    return out, True
+
+
+def fused_matmul_lut_bank(x: jax.Array, w: jax.Array, luts: jax.Array,
+                          sa, za, sw, zw, qmax) -> jax.Array:
+    """Banked fused matmul: one launch per LUT bank, per-lane quant
+    scalars (n,).  x: (M,K) shared or (n,M,K) banked floats;
+    luts: (n,256,256) -> (n,M,N) f32, per lane bit-identical to
+    ``fused_matmul_lut``.  LUT slices are DMA double-buffered."""
+    return fused_matmul_bank_pallas(x, w, luts, sa, za, sw, zw, qmax,
+                                    interpret=_interpret())
+
+
+@jax.custom_batching.custom_vmap
+def fused_composed_matmul_lut(x: jax.Array, w: jax.Array,
+                              lut: jax.Array, mask, rcode,
+                              sa, za, sw, zw, qmax) -> jax.Array:
+    """Fused composed wide (12/16-bit) approximate matmul on floats.
+    ``mask`` is the 2W-bit product mask (0 = narrow lane) and ``rcode``
+    the ``registry.encode_reduce`` (kind, k) int32 pair — the reduce
+    tree is RUNTIME data here, so every adder family (and any mix of
+    them across vmapped lanes) shares one compiled program, unlike the
+    per-reduce ``composed_matmul_lut`` specializations."""
+    return fused_composed_matmul_pallas(x, w, lut, mask, rcode,
+                                        sa, za, sw, zw, qmax,
+                                        interpret=_interpret())
+
+
+@fused_composed_matmul_lut.def_vmap
+def _fused_composed_matmul_lut_vmap(axis_size, in_batched, x, w, lut,
+                                    mask, rcode, sa, za, sw, zw, qmax):
+    x_b, w_b, lut_b = in_batched[:3]
+    if w_b:
+        out = jax.vmap(
+            lambda *a: fused_composed_matmul_pallas(
+                *a, interpret=_interpret()),
+            in_axes=tuple(0 if b else None for b in in_batched),
+        )(x, w, lut, mask, rcode, sa, za, sw, zw, qmax)
+        return out, True
+    luts = _bcast(lut, lut_b, axis_size)
+    rest = [_bcast(v, b, axis_size)
+            for v, b in zip((mask, rcode, sa, za, sw, zw, qmax),
+                            in_batched[3:])]
+    out = fused_composed_matmul_lut_bank(x, w, luts, *rest)
+    return out, True
+
+
+def fused_composed_matmul_lut_bank(x: jax.Array, w: jax.Array,
+                                   luts: jax.Array, masks, rcodes,
+                                   sa, za, sw, zw, qmax) -> jax.Array:
+    """Banked composed fused matmul: per-lane masks (n,), reduce codes
+    (n,2) and quant scalars (n,) in ONE program — mixed-width AND
+    mixed-reduce banks evaluate in a single launch."""
+    return fused_composed_matmul_bank_pallas(
+        x, w, luts, masks, rcodes, sa, za, sw, zw, qmax,
+        interpret=_interpret())
 
 
 def lowrank_matmul(qa: jax.Array, qw: jax.Array, u: jax.Array, v: jax.Array

@@ -43,6 +43,76 @@ def composed_matmul_ref(qa: jax.Array, qw: jax.Array, lut: jax.Array,
     return _impl(qa, qw, lut, mask, reduce)
 
 
+def _affine_q(v: jax.Array, scale, zp, qmax) -> jax.Array:
+    """``repro.approx.quant.quantize`` with explicit scalars (same op
+    and dtype order — the fused kernels' in-register quantize)."""
+    q = jnp.round(v.astype(jnp.float32) / scale) + zp
+    return jnp.clip(q, 0, qmax).astype(jnp.int32)
+
+
+def _fused_correct(s: jax.Array, qa: jax.Array, qw: jax.Array,
+                   za, zw, sa, sw, k: int) -> jax.Array:
+    """The f32 zero-point correction + dequant epilogue of
+    ``repro.approx.backend._quantized_matmul`` (non-exact branch)."""
+    row = jnp.sum(qa, axis=1, dtype=jnp.int32).astype(jnp.float32)
+    col = jnp.sum(qw, axis=0, dtype=jnp.int32).astype(jnp.float32)
+    zaf = za.astype(jnp.float32)
+    zwf = zw.astype(jnp.float32)
+    acc = s - zwf * row[:, None] - zaf * col[None, :] + k * zaf * zwf
+    return acc * (sa * sw)
+
+
+def fused_matmul_ref(x: jax.Array, w: jax.Array, lut: jax.Array,
+                     sa, za, sw, zw, qmax) -> jax.Array:
+    """Oracle for the fused 8-bit datapath (DESIGN.md §2.10): quantize
+    with pre-calibrated scalars, LUT-gather matmul, f32 correction +
+    dequant — the exact composition the fused Pallas kernel collapses
+    into one program.  x: (M,K) f32; w: (K,N) f32 -> (M,N) f32."""
+    qa = _affine_q(x, sa, za, qmax)
+    qw = _affine_q(w, sw, zw, qmax)
+    s = approx_matmul_lut_ref(qa, qw, lut).astype(jnp.float32)
+    return _fused_correct(s, qa, qw, za, zw, sa, sw, x.shape[-1])
+
+
+def fused_matmul_bank_ref(x: jax.Array, w: jax.Array, luts: jax.Array,
+                          sa, za, sw, zw, qmax) -> jax.Array:
+    """Banked fused oracle: per-lane scalars (n,), x (M,K) shared or
+    (n,M,K) banked, luts (n,256,256) -> (n,M,N) f32."""
+    return jax.vmap(
+        lambda x_b, lut, *s: fused_matmul_ref(x_b, w, lut, *s),
+        in_axes=(None if x.ndim == 2 else 0, 0, 0, 0, 0, 0, 0),
+    )(x, luts, sa, za, sw, zw, qmax)
+
+
+def fused_composed_matmul_ref(x: jax.Array, w: jax.Array,
+                              lut: jax.Array, mask, sa, za, sw, zw,
+                              qmax, reduce: tuple = ("exact", 0)
+                              ) -> jax.Array:
+    """Oracle for the fused composed wide (12/16-bit) datapath: wide
+    quantize, digit-product tile-LUT matmul under the STATIC ``reduce``
+    tree, f32 correction.  The fused kernel takes the reduce as runtime
+    data (``encode_reduce``), so comparing against this static oracle
+    also checks the dynamic-reduce selection."""
+    qa = _affine_q(x, sa, za, qmax)
+    qw = _affine_q(w, sw, zw, qmax)
+    s = composed_matmul_ref(qa, qw, lut, mask, reduce)
+    return _fused_correct(s, qa, qw, za, zw, sa, sw, x.shape[-1])
+
+
+def fused_composed_matmul_bank_ref(x: jax.Array, w: jax.Array,
+                                   luts: jax.Array, masks, reduces,
+                                   sa, za, sw, zw, qmax) -> jax.Array:
+    """Banked composed fused oracle; ``reduces`` is a per-lane sequence
+    of static reduce tuples (mixed-reduce banks allowed)."""
+    outs = []
+    for b in range(luts.shape[0]):
+        x_b = x if x.ndim == 2 else x[b]
+        outs.append(fused_composed_matmul_ref(
+            x_b, w, luts[b], masks[b], sa[b], za[b], sw[b], zw[b],
+            qmax[b], tuple(reduces[b])))
+    return jnp.stack(outs)
+
+
 def lowrank_matmul_ref(qa: jax.Array, qw: jax.Array, u: jax.Array,
                        v: jax.Array) -> jax.Array:
     """Σ_r tableU_r(qa) @ tableV_r(qw), f32. u,v: (R,256) f32."""

@@ -48,7 +48,14 @@ def main() -> None:
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the compile warmup (end-to-end time "
                          "then includes tracing)")
+    ap.add_argument("--compile-cache", action="store_true",
+                    help="enable the persistent JAX compilation cache "
+                         "so serve restarts skip XLA recompiles "
+                         "(DESIGN.md §2.10)")
     args = ap.parse_args()
+    if args.compile_cache:
+        from repro.launch.compile_cache import enable_compile_cache
+        print(f"compile cache: {enable_compile_cache()}")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,0 +1,71 @@
+"""Persistent-compilation-cache unit tests (DESIGN.md §2.10).
+
+The cache-hit test is the contract the benchmark lanes rely on: a
+second process (simulated here by ``jax.clear_caches()``) re-running
+the same program must be served from disk, observable as
+``cache_hits > 0`` and ``fresh_compiles == 0`` through ``trace_audit``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.compile_cache import (XLA_BENCH_FLAGS,
+                                        enable_compile_cache, trace_audit,
+                                        xla_flags_env)
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    """Point the persistent cache at a throwaway dir, restore after."""
+    monkeypatch.delenv("JAX_COMPILATION_CACHE_DIR", raising=False)
+    yield str(tmp_path / "jax_cache")
+    jax.config.update("jax_compilation_cache_dir", None)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+
+def test_env_var_wins(cache_dir, monkeypatch, tmp_path):
+    env_dir = str(tmp_path / "from_env")
+    monkeypatch.setenv("JAX_COMPILATION_CACHE_DIR", env_dir)
+    assert enable_compile_cache(cache_dir) == env_dir
+
+
+def test_persistent_cache_hit(cache_dir):
+    d = enable_compile_cache(cache_dir)
+    assert d == cache_dir
+
+    def fn(x):
+        return jnp.tanh(x) * 3.25 + 0.125
+
+    cold_x = jnp.full((17,), 0.5)
+    with trace_audit() as cold:
+        jax.jit(fn)(cold_x).block_until_ready()
+    assert cold.fresh_compiles >= 1
+    assert cold.cache_hits == 0
+
+    # simulate a process restart: in-memory jit caches dropped, the
+    # persistent cache on disk survives
+    jax.clear_caches()
+    with trace_audit() as warm:
+        jax.jit(fn)(cold_x).block_until_ready()
+    assert warm.cache_hits >= 1
+    assert warm.fresh_compiles == 0
+    assert warm.traced_programs == cold.traced_programs
+
+
+def test_trace_audit_counts_compiles():
+    with trace_audit() as counts:
+        jax.jit(lambda x: x * 2.5 - 1.0)(jnp.ones((13,))).block_until_ready()
+    assert counts.traced_programs >= 1
+    assert counts.compile_secs >= 0.0
+
+
+def test_xla_flags_env_merges_and_dedups(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--foo --foo")
+    merged = xla_flags_env(("--bar",)).split()
+    assert merged.count("--foo") == 1
+    assert "--bar" in merged
+    for f in XLA_BENCH_FLAGS:
+        assert f in merged
