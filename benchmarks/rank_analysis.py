@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import time
 
+from repro.approx.ranking import kendall, spearman
 from repro.core.library import get_default_library
 from repro.core.luts import rank_profile
 
@@ -15,6 +16,7 @@ from .common import emit
 def run() -> None:
     lib = get_default_library()
     sel = lib.case_study_selection(per_metric=10)
+    circuit_mae, r1_mae = [], []
     for e in sel:
         t0 = time.time()
         lut = lib.lut(e.name)
@@ -25,6 +27,13 @@ def run() -> None:
         emit(f"rank/{e.name}", us,
              f"circuit_mae={e.errors.mae:.3f};rank_needed={need};"
              f"mae_r1={prof[0]['mae']:.3f};mae_r4={prof[3]['mae']:.3f}")
+        circuit_mae.append(e.errors.mae)
+        r1_mae.append(prof[0]["mae"])
+    # does the circuit's own error rank-predict how hard its LUT is to
+    # decompose?  (same tie-aware helpers as the surrogate fidelity gate)
+    emit("rank/error_vs_rank1_correlation", 0.0,
+         f"spearman={spearman(circuit_mae, r1_mae):.4f};"
+         f"kendall={kendall(circuit_mae, r1_mae):.4f};n={len(sel)}")
 
 
 if __name__ == "__main__":

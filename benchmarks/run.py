@@ -34,6 +34,8 @@ SUITES = {
     "evolve": ("benchmarks.evolve_library",
                "device-resident CGP library generation "
                "(BENCH_evolve.json)"),
+    "dse": ("benchmarks.dse_surrogate",
+            "surrogate-guided vs exact-sweep DSE (BENCH_dse.json)"),
 }
 
 # module-name aliases: every suite is addressable by its module's

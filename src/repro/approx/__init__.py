@@ -17,6 +17,11 @@ from .backend import MatmulBackend, as_backend, backend_matmul
 from .layers import (ApproxPolicy, bank_eval, policy_bank_eval,
                      policy_for_lane, spec_of)
 from .resilience import BankableEval, LayerComponents, can_bank
+from .ranking import kendall, per_layer_spearman, rankdata, spearman
+from .surrogate import (FEATURE_NAMES, SurrogateConfig,
+                        SurrogatePredictor, circuit_features,
+                        feature_matrix, fit_surrogate,
+                        surrogate_components, train_subset)
 from .dse import (DesignPoint, ExploreResult, compose_assignments,
                   explore, explore_heterogeneous, pareto_points,
                   select_multiplier, select_point, verify_assignments)

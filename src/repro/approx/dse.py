@@ -197,6 +197,11 @@ class ExploreResult:
     baseline_metrics: dict = field(default_factory=dict)
     objectives: tuple = DEFAULT_OBJECTIVES
     primary: str = "accuracy"
+    # surrogate predict-stage record (DESIGN.md §2.11): training split,
+    # calibration band, fidelity diagnostics.  None on exact-predict
+    # explorations — and absent from their JSON, so pre-surrogate
+    # round-trips stay byte-identical.
+    surrogate: Optional[dict] = None
 
     def _primary_direction(self) -> str:
         try:
@@ -247,7 +252,7 @@ class ExploreResult:
                 directions[name] = get_objective(name).direction
             except KeyError:
                 pass
-        return {
+        out = {
             "baseline_accuracy": self.baseline_accuracy,
             "all_layers": [p.to_dict() for p in self.all_layers],
             "per_layer": [p.to_dict() for p in self.per_layer],
@@ -258,6 +263,9 @@ class ExploreResult:
             "primary": self.primary,
             "objective_directions": directions,
         }
+        if self.surrogate is not None:
+            out["surrogate"] = dict(self.surrogate)
+        return out
 
     @staticmethod
     def from_json_dict(d: Mapping) -> "ExploreResult":
@@ -283,7 +291,9 @@ class ExploreResult:
                       if d.get("selected") else None),
             baseline_metrics=dict(d.get("baseline_metrics") or {}),
             objectives=tuple(d.get("objectives") or DEFAULT_OBJECTIVES),
-            primary=d.get("primary", "accuracy"))
+            primary=d.get("primary", "accuracy"),
+            surrogate=(dict(d["surrogate"])
+                       if d.get("surrogate") is not None else None))
 
 
 def _seed_cache(cache: dict, rows: list[ResilienceRow], golden) -> None:
@@ -638,6 +648,9 @@ def explore_heterogeneous(
     sharding=None,
     assign_sharding=None,
     rel_power=None,
+    predictor: str = "exact",
+    train_fraction: float = 0.25,
+    surrogate_config=None,
 ) -> ExploreResult:
     """Two-stage heterogeneous DSE (autoAx-style, DESIGN.md §2.5).
 
@@ -655,6 +668,18 @@ def explore_heterogeneous(
     search composes up to ``top_k`` full assignments whose *predicted*
     (additive-drop) accuracy stays within ``quality_bound`` of the
     golden baseline, optionally under a ``power_budget`` ceiling.
+
+    ``predictor="surrogate"`` (DESIGN.md §2.11) replaces the full
+    exact sweep with the learned predict stage: only a deterministic
+    power-spread ``train_fraction`` of the candidates is measured
+    exactly (those rows still land on ``result.per_layer``), a small
+    MLP trained on them predicts the rest of the component matrix,
+    and the beam's quality threshold widens by the surrogate's
+    held-out calibration band so prediction error enlarges the
+    shortlist rather than cutting good compositions.  The training
+    record rides on ``result.surrogate``.  Stage 2 and the final
+    selection are exact either way — and ``predictor="exact"`` (the
+    default) is the historical path, bit-identical.
 
     Stage 2 (verify): the shortlist — plus any ``extra_assignments`` —
     is measured EXACTLY in one ``policy_bank_eval`` program (sequential
@@ -675,30 +700,69 @@ def explore_heterogeneous(
     cache = cache if cache is not None else {}
     run = wl.cached(cache)
 
+    if predictor not in ("exact", "surrogate"):
+        raise ValueError(
+            f"predictor must be 'exact' or 'surrogate', got {predictor!r}")
+
     golden = BackendSpec.golden().materialize()
     per_layer_points: list[DesignPoint] = []
     baseline_metrics: dict = {}
+    surrogate_record: Optional[dict] = None
+    beam_bound = quality_bound
     if components is None:
         baseline_metrics = run.measure(ApproxPolicy(default=golden))
         baseline = baseline_metrics[wl.primary]
         do_batch = batch and can_bank(wl, mode, variant)
-        rows = per_layer_sweep(wl if do_batch else run, layer_counts,
-                               multipliers, library, mode=mode,
-                               base=golden, variant=variant,
-                               batch=do_batch, sharding=sharding,
-                               rel_power=rel_power)
+        if predictor == "surrogate":
+            from .surrogate import surrogate_components
+            components, sur, rows = surrogate_components(
+                wl if do_batch else run, layer_counts, multipliers,
+                library, baseline, direction=wl.primary_direction,
+                train_fraction=train_fraction, mode=mode,
+                variant=variant, base=golden, batch=do_batch,
+                sharding=sharding, rel_power=rel_power,
+                config=surrogate_config)
+            # predict-then-verify discipline: the beam screens on
+            # predictions, so its band must absorb the surrogate's
+            # held-out error — the exact verify stage still gates the
+            # final selection on the un-widened bound
+            beam_bound = quality_bound + sur.calibration
+            surrogate_record = {**sur.summary(),
+                                "train_fraction": train_fraction,
+                                "beam_bound": beam_bound}
+        else:
+            rows = per_layer_sweep(wl if do_batch else run, layer_counts,
+                                   multipliers, library, mode=mode,
+                                   base=golden, variant=variant,
+                                   batch=do_batch, sharding=sharding,
+                                   rel_power=rel_power)
+            components = LayerComponents.from_rows(
+                rows, layer_counts, baseline,
+                direction=wl.primary_direction)
         if do_batch:
             _seed_cache(cache, rows, golden)
-        components = LayerComponents.from_rows(
-            rows, layer_counts, baseline,
-            direction=wl.primary_direction)
         per_layer_points = [DesignPoint.from_row(r) for r in rows]
     baseline = components.baseline
 
     candidates = compose_assignments(components,
-                                     quality_bound=quality_bound,
+                                     quality_bound=beam_bound,
                                      power_budget=power_budget,
                                      beam_width=beam_width, top_k=top_k)
+    if beam_bound != quality_bound:
+        # the widened band admits cheaper-but-riskier compositions that
+        # can crowd the power-ordered shortlist; union in the un-widened
+        # beam's shortlist so conservative compositions stay verified —
+        # verification is one banked program, so the extra rows are
+        # nearly free
+        seen_rows = {tuple(r.tolist()) for r in candidates}
+        for row in compose_assignments(components,
+                                       quality_bound=quality_bound,
+                                       power_budget=power_budget,
+                                       beam_width=beam_width,
+                                       top_k=top_k):
+            if tuple(row.tolist()) not in seen_rows:
+                seen_rows.add(tuple(row.tolist()))
+                candidates.append(row)
     assignments = [
         {l: components.multipliers[i]
          for l, i in zip(components.layers, row)}
@@ -719,7 +783,8 @@ def explore_heterogeneous(
                            heterogeneous=hetero,
                            baseline_metrics=baseline_metrics,
                            objectives=(wl.primary, "power"),
-                           primary=wl.primary)
+                           primary=wl.primary,
+                           surrogate=surrogate_record)
     constraints = {wl.primary: _budget(result, quality_bound)}
     if power_budget is not None:
         constraints["power"] = objectives_mod.AtMost(power_budget)

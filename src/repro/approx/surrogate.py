@@ -1,0 +1,479 @@
+"""Surrogate predict stage for the heterogeneous DSE (DESIGN.md §2.11).
+
+The two-stage ``explore_heterogeneous`` (predict → verify, DESIGN.md
+§2.5) historically built its prediction-stage component models from a
+FULL exact per-layer sweep: O(n_layers × n_circuits) device
+evaluations, the named scaling wall for thousands-of-circuits libraries
+× 50+-layer models.  This module replaces that sweep with the autoAx
+move (Mrazek et al., 2019) in ApproxGNN's feature style (Vlcek &
+Mrazek, 2025): train a small model on a SUBSAMPLE of exact sweep rows,
+predict per-layer quality for every other circuit from features the
+library already carries, and keep the exact batched verification as the
+safety net.
+
+Three layers:
+
+  * ``circuit_features`` / ``feature_matrix`` — a fixed-width vector
+    per ``CircuitEntry``: the six error statistics from
+    ``core.metrics`` (log-compressed — wce/mse span orders of
+    magnitude), the cost axes (rel power, area, delay), width/source
+    tags, and netlist-structure terms (active-gate histogram, logic
+    depth, node count) from ``core.netlist``.  Structure-only features
+    double as the input of the learned COST head, which must work for
+    circuits whose error/cost reports don't exist yet.
+  * ``fit_surrogate`` — trains a small JAX MLP mapping a circuit's
+    feature vector to its per-layer quality-DROP vector, on any list of
+    exact sweep rows (``ResilienceRow`` or ``DesignPoint`` duck-typed:
+    ``.layer``/``.multiplier``/``.accuracy``) — ``ExploreResult`` and
+    ``BENCH_heterogeneous`` rows are valid corpora as-is.  A
+    deterministic held-out split yields per-layer Spearman fidelity
+    diagnostics and a CALIBRATION band: the quantile of the held-out
+    |total predicted drop − total measured drop| residuals, which the
+    beam adds to its quality threshold so the surrogate's error widens
+    the shortlist instead of silently cutting good compositions.
+  * ``surrogate_components`` — the drop-in predict stage: sweep a
+    deterministic power-spread subset of the candidate multipliers
+    exactly, fit, predict the rest, and return a ``LayerComponents``
+    where measured cells stay exact and unmeasured ones are surrogate
+    predictions.  Power is NOT predicted here — the library's
+    count-weighted power model is already exact and free (the learned
+    cost head is reported as a fidelity diagnostic for the
+    unseen-circuit case, not used for accounting).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.gates import N_FUNCS
+from .power import auto_rel_power
+from .ranking import spearman
+from .resilience import LayerComponents, ResilienceRow, per_layer_sweep
+
+# ----------------------------------------------------------------------
+# Feature extraction
+# ----------------------------------------------------------------------
+_SOURCES = ("exact", "evolved", "truncation", "bam", "loa", "composed")
+
+FEATURE_NAMES: tuple[str, ...] = (
+    tuple(f"log1p_{m}" for m in
+          ("er", "mae", "mse", "mre", "wce", "wcre"))
+    + ("rel_power", "log1p_area", "log1p_delay")
+    + ("width_over_8",)
+    + tuple(f"src_{s}" for s in _SOURCES)
+    + tuple(f"gate_frac_{f}" for f in range(N_FUNCS))
+    + ("log1p_n_active", "log1p_depth", "n_i_over_16", "n_o_over_16")
+)
+
+# structure-only block (width/source/gates/depth/io) — everything after
+# the error statistics and cost axes; the learned cost head trains on
+# this slice alone, since for a genuinely unseen circuit the error and
+# cost reports are exactly what doesn't exist yet
+STRUCTURE_SLICE = slice(9, None)
+
+
+def circuit_features(entry) -> np.ndarray:
+    """Fixed-width float64 feature vector for one ``CircuitEntry``, in
+    ``FEATURE_NAMES`` order."""
+    nl = entry.netlist
+    n_active = nl.n_active()
+    hist = nl.gate_histogram().astype(np.float64)
+    frac = hist / max(n_active, 1)
+    parts = [
+        np.log1p(entry.errors.as_vector()),
+        np.array([entry.rel_power,
+                  np.log1p(entry.cost.area),
+                  np.log1p(entry.cost.delay)]),
+        np.array([entry.width / 8.0]),
+        np.array([1.0 if entry.source == s else 0.0 for s in _SOURCES]),
+        frac,
+        np.array([np.log1p(n_active), np.log1p(nl.logic_depth()),
+                  nl.n_i / 16.0, nl.n_o / 16.0]),
+    ]
+    vec = np.concatenate(parts)
+    assert vec.shape == (len(FEATURE_NAMES),)
+    return vec
+
+
+def feature_matrix(entries: Sequence) -> np.ndarray:
+    """(n_entries, n_features) feature matrix."""
+    return np.stack([circuit_features(e) for e in entries])
+
+
+# ----------------------------------------------------------------------
+# Model
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class SurrogateConfig:
+    """Hyperparameters of the QoR surrogate.  The defaults are sized
+    for the regime this stage lives in — tens of training circuits,
+    O(10) layers — where a small full-batch MLP with weight decay is
+    the right capacity."""
+
+    hidden: tuple[int, ...] = (32, 32)
+    epochs: int = 1500
+    lr: float = 1e-2
+    weight_decay: float = 1e-4
+    seed: int = 0
+    val_fraction: float = 0.2
+    calibration_quantile: float = 0.9
+    ridge_lambda: float = 1e-2      # learned cost head regularizer
+
+    def as_dict(self) -> dict:
+        return {
+            "hidden": list(self.hidden), "epochs": self.epochs,
+            "lr": self.lr, "weight_decay": self.weight_decay,
+            "seed": self.seed, "val_fraction": self.val_fraction,
+            "calibration_quantile": self.calibration_quantile,
+            "ridge_lambda": self.ridge_lambda,
+        }
+
+
+def _init_params(rng: np.random.Generator, sizes: Sequence[int]) -> list:
+    import jax.numpy as jnp
+
+    params = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        w = rng.normal(0.0, 1.0 / np.sqrt(fan_in), (fan_in, fan_out))
+        params.append((jnp.asarray(w, jnp.float32),
+                       jnp.zeros((fan_out,), jnp.float32)))
+    return params
+
+
+def _apply(params: list, x):
+    import jax.numpy as jnp
+
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.tanh(h @ w + b)
+    w, b = params[-1]
+    return h @ w + b
+
+
+def _train_mlp(params: list, x: np.ndarray, y: np.ndarray,
+               cfg: SurrogateConfig) -> list:
+    """Full-batch Adam on MSE + L2; one jitted ``fori_loop`` over
+    epochs.  Deterministic: fixed init seed, fixed data, CPU-exact."""
+    import jax
+    import jax.numpy as jnp
+
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_fn(p):
+        pred = _apply(p, xj)
+        l2 = sum(jnp.sum(w * w) for w, _ in p)
+        return jnp.mean((pred - yj) ** 2) + cfg.weight_decay * l2
+
+    def step(i, state):
+        p, m, v = state
+        g = jax.grad(loss_fn)(p)
+        m = jax.tree_util.tree_map(
+            lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+        v = jax.tree_util.tree_map(
+            lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+        t = (i + 1).astype(jnp.float32)
+        p = jax.tree_util.tree_map(
+            lambda pi, mi, vi: pi - cfg.lr * (mi / (1 - b1 ** t))
+            / (jnp.sqrt(vi / (1 - b2 ** t)) + eps), p, m, v)
+        return p, m, v
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    final, _, _ = jax.jit(
+        lambda p: jax.lax.fori_loop(
+            0, cfg.epochs, step,
+            (p, zeros, jax.tree_util.tree_map(jnp.zeros_like, p))))(params)
+    return jax.tree_util.tree_map(np.asarray, final)
+
+
+def _standardize(x: np.ndarray, mu: np.ndarray,
+                 sigma: np.ndarray) -> np.ndarray:
+    return (x - mu) / sigma
+
+
+def _stats(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    mu = x.mean(axis=0)
+    sigma = np.maximum(x.std(axis=0), 1e-8)
+    return mu, sigma
+
+
+# ----------------------------------------------------------------------
+# Predictor
+# ----------------------------------------------------------------------
+@dataclass
+class SurrogatePredictor:
+    """Trained QoR (+ cost) surrogate over one workload's layers.
+
+    ``predict_drop`` maps circuit names to a (n_layers, n_names)
+    matrix of predicted primary-metric DEGRADATIONS (clipped >= 0,
+    the ``LayerComponents.drop`` convention); ``predict_quality``
+    re-bases onto the baseline in the primary's direction.
+    ``calibration`` is the held-out quantile of |total predicted −
+    total measured| drop — the band the beam adds to its quality
+    threshold (DESIGN.md §2.11)."""
+
+    layers: tuple[str, ...]
+    baseline: float
+    direction: str
+    params: list
+    x_mu: np.ndarray
+    x_sigma: np.ndarray
+    y_mu: np.ndarray
+    y_sigma: np.ndarray
+    train_names: tuple[str, ...]
+    val_names: tuple[str, ...]
+    calibration: float
+    config: SurrogateConfig
+    cost_coef: Optional[np.ndarray] = None
+    cost_mean: float = 0.0
+    diagnostics: dict = field(default_factory=dict)
+
+    def _features(self, names: Sequence[str], library) -> np.ndarray:
+        return feature_matrix([library.entry(n) for n in names])
+
+    def predict_drop(self, names: Sequence[str], library) -> np.ndarray:
+        """(n_layers, n_names) predicted per-layer drops, >= 0."""
+        x = _standardize(self._features(names, library),
+                         self.x_mu, self.x_sigma)
+        import jax.numpy as jnp
+
+        pred = np.asarray(_apply(self.params, jnp.asarray(x, jnp.float32)))
+        pred = pred * self.y_sigma + self.y_mu          # (n_names, n_layers)
+        return np.maximum(pred.T.astype(np.float64), 0.0)
+
+    def predict_quality(self, names: Sequence[str], library) -> np.ndarray:
+        """(n_layers, n_names) predicted primary-metric values — the
+        ``LayerComponents.quality`` convention (a min primary RISES by
+        the drop, a max primary falls)."""
+        d = self.predict_drop(names, library)
+        return (self.baseline + d if self.direction == "min"
+                else self.baseline - d)
+
+    def predict_rel_power(self, names: Sequence[str], library) -> np.ndarray:
+        """Learned cost head: relative power from STRUCTURE-ONLY
+        features (ridge on log power) — the unseen-circuit estimate.
+        Accounting everywhere else uses the library's exact values;
+        this exists for circuits that don't have them yet."""
+        if self.cost_coef is None:
+            raise ValueError("predictor was fit without a cost head")
+        x = _standardize(self._features(names, library),
+                         self.x_mu, self.x_sigma)[:, STRUCTURE_SLICE]
+        return np.exp(x @ self.cost_coef + self.cost_mean)
+
+    def summary(self) -> dict:
+        """JSON-able training/fidelity record (rides on
+        ``ExploreResult.surrogate`` and ``BENCH_dse.json``)."""
+        return {
+            "layers": list(self.layers),
+            "n_train": len(self.train_names),
+            "n_val": len(self.val_names),
+            "train_names": list(self.train_names),
+            "val_names": list(self.val_names),
+            "calibration": self.calibration,
+            "direction": self.direction,
+            "config": self.config.as_dict(),
+            **self.diagnostics,
+        }
+
+
+def _rows_to_matrix(rows, baseline: float, direction: str):
+    """Group duck-typed sweep rows (``.layer``/``.multiplier``/
+    ``.accuracy``; per-layer rows only) into (layers, names, drop
+    matrix (n_names, n_layers)).  Missing cells mean "no measured
+    damage" — zero drop, the ``LayerComponents.from_rows`` fallback."""
+    layers = tuple(dict.fromkeys(
+        r.layer for r in rows if r.layer not in ("all", "hetero")))
+    names = tuple(dict.fromkeys(
+        r.multiplier for r in rows if r.layer not in ("all", "hetero")))
+    li = {l: j for j, l in enumerate(layers)}
+    ni = {n: i for i, n in enumerate(names)}
+    drops = np.zeros((len(names), len(layers)), dtype=np.float64)
+    for r in rows:
+        if r.layer in ("all", "hetero"):
+            continue
+        d = (r.accuracy - baseline if direction == "min"
+             else baseline - r.accuracy)
+        drops[ni[r.multiplier], li[r.layer]] = max(float(d), 0.0)
+    return layers, names, drops
+
+
+def _split_indices(names: Sequence[str], library,
+                   val_fraction: float) -> tuple[list[int], list[int]]:
+    """Deterministic held-out split: order circuits along the power
+    axis (name-tiebroken) and hold out every k-th — the validation set
+    then spans the cheap-to-accurate range instead of clustering."""
+    order = sorted(range(len(names)),
+                   key=lambda i: (library.entry(names[i]).rel_power,
+                                  names[i]))
+    n_val = int(round(val_fraction * len(names)))
+    if n_val == 0 or len(names) - n_val < 2:
+        return list(order), []
+    k = max(2, len(names) // n_val)
+    val = [order[i] for i in range(1, len(names), k)][:n_val]
+    train = [i for i in order if i not in val]
+    return train, val
+
+
+def fit_surrogate(rows, library, baseline: float,
+                  direction: str = "max",
+                  config: Optional[SurrogateConfig] = None
+                  ) -> SurrogatePredictor:
+    """Train the QoR surrogate on exact per-layer sweep rows.
+
+    ``rows`` is any list of ``ResilienceRow`` or ``DesignPoint``
+    objects (duck-typed); "all"/"hetero" rows are ignored.  Quality is
+    learned as standardized per-layer DROP vectors from standardized
+    circuit features; a deterministic held-out split provides the
+    calibration band and per-layer Spearman diagnostics, and a ridge
+    cost head on the structure-only feature block learns relative
+    power for the unseen-circuit case.
+    """
+    cfg = config or SurrogateConfig()
+    layers, names, drops = _rows_to_matrix(rows, baseline, direction)
+    if not layers or len(names) < 3:
+        raise ValueError(
+            f"fit_surrogate needs per-layer rows over >= 3 circuits; "
+            f"got {len(names)} circuits x {len(layers)} layers")
+    x_all = feature_matrix([library.entry(n) for n in names])
+    tr, va = _split_indices(names, library, cfg.val_fraction)
+
+    x_mu, x_sigma = _stats(x_all[tr])
+    y_mu, y_sigma = _stats(drops[tr])
+    xs = _standardize(x_all, x_mu, x_sigma)
+    ys = _standardize(drops, y_mu, y_sigma)
+
+    rng = np.random.default_rng(cfg.seed)
+    sizes = [x_all.shape[1], *cfg.hidden, len(layers)]
+    params = _train_mlp(_init_params(rng, sizes), xs[tr], ys[tr], cfg)
+
+    pred = SurrogatePredictor(
+        layers=layers, baseline=float(baseline), direction=direction,
+        params=params, x_mu=x_mu, x_sigma=x_sigma, y_mu=y_mu,
+        y_sigma=y_sigma,
+        train_names=tuple(names[i] for i in tr),
+        val_names=tuple(names[i] for i in va),
+        calibration=0.0, config=cfg)
+
+    # learned cost head (structure-only ridge on log rel power)
+    rp = np.array([library.entry(n).rel_power for n in names])
+    y_log = np.log(np.maximum(rp, 1e-6))
+    xsr = xs[tr][:, STRUCTURE_SLICE]
+    lam = cfg.ridge_lambda
+    pred.cost_mean = float(y_log[tr].mean())
+    yc = y_log[tr] - pred.cost_mean
+    pred.cost_coef = np.linalg.solve(
+        xsr.T @ xsr + lam * np.eye(xsr.shape[1]), xsr.T @ yc)
+
+    # held-out calibration + fidelity diagnostics (falls back to the
+    # train split for tiny corpora — flagged, since train residuals
+    # understate the band)
+    hold = va if va else tr
+    d_pred = pred.predict_drop([names[i] for i in hold], library)
+    d_true = drops[hold].T
+    total_res = np.abs(d_pred.sum(axis=0) - d_true.sum(axis=0))
+    cell_res = np.abs(d_pred - d_true)
+    pred.calibration = float(np.quantile(total_res,
+                                         cfg.calibration_quantile))
+    rp_pred = pred.predict_rel_power([names[i] for i in hold], library)
+    pred.diagnostics = {
+        "holdout": "val" if va else "train",
+        "cell_residual_q": float(np.quantile(
+            cell_res, cfg.calibration_quantile)),
+        "total_residual_mean": float(total_res.mean()),
+        "val_spearman": {
+            layer: spearman(d_pred[j], d_true[j])
+            for j, layer in enumerate(layers)},
+        "power_spearman": spearman(rp_pred, rp[hold]),
+    }
+    return pred
+
+
+# ----------------------------------------------------------------------
+# Predict-stage orchestration
+# ----------------------------------------------------------------------
+def train_subset(multipliers: Sequence[str], library,
+                 train_fraction: float,
+                 rel_power: Optional[dict] = None) -> list[str]:
+    """Deterministic training subset: candidates sorted along the
+    power axis, then evenly spaced indices including both endpoints —
+    the subsample sees the whole cheap-to-exact range, which is what
+    makes the drop regression interpolative rather than extrapolative.
+    At least 6 circuits (or all of them, below that)."""
+    def rp(name: str) -> float:
+        if rel_power is not None and name in rel_power:
+            return float(rel_power[name])
+        return float(library.entry(name).rel_power)
+
+    ordered = sorted(multipliers, key=lambda n: (rp(n), n))
+    n = len(ordered)
+    n_train = max(6, int(np.ceil(train_fraction * n)))
+    if n_train >= n:
+        return list(ordered)
+    idx = np.unique(np.round(np.linspace(0, n - 1, n_train)).astype(int))
+    return [ordered[i] for i in idx]
+
+
+def surrogate_components(
+    eval_fn: Callable,
+    layer_counts: dict[str, int],
+    multipliers: Sequence[str],
+    library,
+    baseline: float,
+    direction: str = "max",
+    train_fraction: float = 0.25,
+    mode: str = "lut",
+    variant: str = "ref",
+    base=None,
+    batch: bool = False,
+    sharding=None,
+    rel_power=None,
+    config: Optional[SurrogateConfig] = None,
+) -> tuple[LayerComponents, SurrogatePredictor, list[ResilienceRow]]:
+    """The surrogate predict stage as a ``LayerComponents`` factory.
+
+    Runs the exact per-layer sweep ONLY over a deterministic
+    power-spread ``train_fraction`` of the candidates, fits the
+    surrogate on those rows, and predicts quality for the rest:
+    ``quality[j, i]`` holds the exact measurement where one exists
+    and the surrogate prediction otherwise.  Relative power stays the
+    library's exact accounting for EVERY candidate (it costs nothing).
+    Returns ``(components, predictor, measured_rows)`` — the rows feed
+    result caches and ``per_layer`` reporting exactly like the full
+    sweep's would.
+    """
+    multipliers = list(multipliers)
+    rp_map = (rel_power if rel_power is not None
+              else auto_rel_power(library, multipliers))
+    names_tr = train_subset(multipliers, library, train_fraction,
+                            rel_power=rp_map)
+    rows = per_layer_sweep(eval_fn, layer_counts, names_tr, library,
+                           mode=mode, base=base, variant=variant,
+                           batch=batch, sharding=sharding,
+                           rel_power=rp_map)
+    predictor = fit_surrogate(rows, library, baseline,
+                              direction=direction, config=config)
+
+    layers = tuple(layer_counts)
+    quality = predictor.predict_quality(multipliers, library)
+    # exact measurements override their own predictions — the surrogate
+    # only speaks for circuits the sweep never touched
+    li = {l: j for j, l in enumerate(layers)}
+    mi = {m: i for i, m in enumerate(multipliers)}
+    for r in rows:
+        if r.layer in ("all", "hetero"):
+            continue
+        quality[li[r.layer], mi[r.multiplier]] = r.accuracy
+
+    rel = np.array([
+        rp_map[n] if rp_map is not None else library.entry(n).rel_power
+        for n in multipliers])
+    components = LayerComponents(
+        layers=layers, multipliers=tuple(multipliers), quality=quality,
+        rel_power=rel,
+        counts=tuple(int(layer_counts[l]) for l in layers),
+        total_count=int(sum(layer_counts.values())),
+        baseline=float(baseline), direction=direction)
+    return components, predictor, rows

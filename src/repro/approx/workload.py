@@ -147,11 +147,19 @@ def as_workload(eval_fn) -> Workload:
 # Shipped adapters
 # ----------------------------------------------------------------------
 def classification(cfg, params, *, eval_n: int = 256, batch: int = 64,
-                   name: Optional[str] = None) -> Workload:
+                   name: Optional[str] = None,
+                   fidelity: bool = False) -> Workload:
     """ResNet / synthetic-CIFAR top-1 accuracy — the paper's case-study
     quality metric, as a bank-traceable workload (drop-in for the
     historical ``BankableEval`` the resilience benchmarks built by
-    hand)."""
+    hand).
+
+    ``fidelity=True`` adds ``logit_mae`` (minimize, PRIMARY) against
+    the golden-int8 reference logits: the continuous quality axis the
+    surrogate predict stage trains and gates on (DESIGN.md §2.11) —
+    top-1 accuracy quantizes to 1/eval_n steps, which starves rank
+    statistics of resolution while logit MAE keeps moving.  Accuracy
+    stays measured on every point either way."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -164,21 +172,42 @@ def classification(cfg, params, *, eval_n: int = 256, batch: int = 64,
     images = jnp.asarray(np.stack([b["images"] for b in eval_batches]))
     labels = jnp.asarray(np.stack([b["labels"] for b in eval_batches]))
 
+    ref = None
+    if fidelity:
+        from .specs import BackendSpec
+        golden = ApproxPolicy(default=BackendSpec.golden().materialize())
+        ref = [jax.jit(lambda i=i: resnet.forward(
+            params, images[i], cfg, golden))() for i in range(images.shape[0])]
+
     def traceable_metrics(policy):
-        accs = [jnp.mean((jnp.argmax(
-            resnet.forward(params, images[i], cfg, policy), -1)
-            == labels[i]).astype(jnp.float32))
-            for i in range(images.shape[0])]
-        return {"accuracy": jnp.mean(jnp.stack(accs))}
+        logits = [resnet.forward(params, images[i], cfg, policy)
+                  for i in range(images.shape[0])]
+        accs = [jnp.mean((jnp.argmax(l, -1) == labels[i])
+                         .astype(jnp.float32))
+                for i, l in enumerate(logits)]
+        out = {"accuracy": jnp.mean(jnp.stack(accs))}
+        if ref is not None:
+            maes = [jnp.mean(jnp.abs(l - r)) for l, r in zip(logits, ref)]
+            out["logit_mae"] = jnp.mean(jnp.stack(maes))
+        return out
 
     def fn(policy):
         out = jax.jit(lambda: traceable_metrics(policy))()
         return {k: float(v) for k, v in out.items()}
 
+    base_name = f"classification[resnet{getattr(cfg, 'depth', '')}]"
+    if not fidelity:
+        return Workload(
+            name=name or base_name,
+            fn=fn, metrics=("accuracy",),
+            traceable_metrics=traceable_metrics,
+            directions={"accuracy": "max"},
+            layer_counts=resnet.layer_mult_counts(cfg))
     return Workload(
-        name=name or f"classification[resnet{getattr(cfg, 'depth', '')}]",
-        fn=fn, metrics=("accuracy",), traceable_metrics=traceable_metrics,
-        directions={"accuracy": "max"},
+        name=name or f"{base_name}+fidelity",
+        fn=fn, metrics=("logit_mae", "accuracy"), primary="logit_mae",
+        traceable_metrics=traceable_metrics,
+        directions={"logit_mae": "min", "accuracy": "max"},
         layer_counts=resnet.layer_mult_counts(cfg))
 
 

@@ -38,6 +38,12 @@ class ErrorReport:
     def get(self, name: str) -> float:
         return float(getattr(self, name))
 
+    def as_vector(self) -> np.ndarray:
+        """The six error statistics as a float64 vector in METRIC_NAMES
+        order — the error-statistics block of the surrogate feature
+        vector (DESIGN.md §2.11)."""
+        return np.array([self.get(n) for n in METRIC_NAMES], dtype=np.float64)
+
 
 def error_report_from_values(
     approx: np.ndarray, exact: np.ndarray, exhaustive: bool = True

@@ -98,6 +98,43 @@ class Netlist:
         # but we still count them as "active nodes" for structure reports.
         return int(mask.sum())
 
+    def gate_histogram(self) -> np.ndarray:
+        """Active-node counts per gate function code, shape (N_FUNCS,).
+
+        Only nodes reachable from the primary outputs are counted —
+        padding/junk genes carry no information about the circuit's
+        arithmetic structure.  This is the composition term of the
+        surrogate feature vector (DESIGN.md §2.11).
+        """
+        mask = self.active_mask()
+        hist = np.bincount(self.funcs[mask], minlength=gates.N_FUNCS)
+        return hist.astype(np.int64)
+
+    def logic_depth(self) -> int:
+        """Longest gate-count path from any primary input (or constant
+        source) to any primary output, counting only active non-identity,
+        non-constant gates — a proxy for the critical-path delay that the
+        cost model derives from gate delays.  0 for wire-only circuits.
+        """
+        n, n_i = self.n_nodes, self.n_i
+        active = self.active_mask()
+        depth = np.zeros(n_i + n, dtype=np.int64)
+        for j in range(n):
+            if not active[j]:
+                continue
+            f = int(self.funcs[j])
+            arity = gates.GATE_ARITY[f]
+            d = 0
+            if arity >= 1:
+                d = int(depth[int(self.in0[j])])
+            if arity >= 2:
+                d = max(d, int(depth[int(self.in1[j])]))
+            counts = f not in (gates.IDENTITY, gates.CONST0, gates.CONST1)
+            depth[n_i + j] = d + (1 if counts else 0)
+        if self.outputs.size == 0:
+            return 0
+        return int(max(int(depth[int(s)]) for s in self.outputs))
+
     def compact(self) -> "Netlist":
         """Drop inactive nodes, remapping indices (for storage)."""
         mask = self.active_mask()

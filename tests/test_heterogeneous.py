@@ -339,3 +339,89 @@ def test_network_power_for_assignment_partial_coverage():
     got = network_power_for_assignment(counts, {"a": "m"}, {"m": 0.5})
     assert got == pytest.approx((100 * 0.5 + 300 * 1.0) / 400)
     assert network_power_for_assignment({}, {}, {}) == 1.0
+
+
+# ----------------------------------------------------------------------
+# Predict-stage regression pins (DESIGN.md §2.11): the surrogate
+# refactor added predictor=/train_fraction= plumbing around stage 1 —
+# these pins freeze the exact-predict behavior it must not move.
+# ----------------------------------------------------------------------
+def test_compose_assignments_min_primary_shortlist_pin():
+    """Beam shortlist under a min-direction primary (logit-MAE-style
+    components), pinned bit-identically: same order, same rows."""
+    c = LayerComponents(
+        layers=LAYERS, multipliers=tuple(MULTS),
+        quality=np.asarray([[0.001, 0.010, 0.200],
+                            [0.001, 0.080, 0.500]]),
+        rel_power=np.asarray([1.0, 0.2, 0.02]),
+        counts=(100, 300), total_count=400, baseline=0.001,
+        direction="min")
+    rows = compose_assignments(c, quality_bound=0.05, top_k=6)
+    assert [tuple(r.tolist()) for r in rows] == \
+        [(1, 1), (0, 1), (1, 0), (0, 0)]
+
+
+@pytest.fixture(scope="module")
+def min_primary_workload():
+    """Min-primary (logit_mae) toy workload over the two-matmul net —
+    the seed/weights behind the exact-predict pin."""
+    from repro.approx.workload import logit_fidelity
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w_a = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    w_b = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+
+    def forward(policy, xb):
+        y = policy.matmul("lin_a", xb, w_a)
+        return policy.matmul("lin_b", jax.nn.relu(y), w_b)
+
+    return logit_fidelity(forward, [x], layer_counts=dict(COUNTS))
+
+
+def test_explore_heterogeneous_exact_predictor_pin(lib,
+                                                   min_primary_workload):
+    """Same seed + predictor="exact" reproduces today's shortlist
+    bit-identically: baseline, verified points (order, accuracy,
+    power), selection, and the JSON surface (no surrogate key)."""
+    res = explore_heterogeneous(
+        min_primary_workload, dict(COUNTS), lib, multipliers=MULTS,
+        quality_bound=30.0, top_k=6)
+    assert res.baseline_accuracy == 0.12060075998306274
+    expected = [
+        ({"lin_a": "mul8u_trunc2", "lin_b": "mul8u_trunc2"},
+         8.694466590881348, 0.023479520066197766),
+        ({"lin_a": "mul8u_trunc4", "lin_b": "mul8u_trunc2"},
+         8.662344932556152, 0.06710281340504759),
+        ({"lin_a": "mul8u_trunc2", "lin_b": "mul8u_trunc4"},
+         8.694466590881348, 0.15434940008274725),
+        ({"lin_a": "mul8u_trunc4", "lin_b": "mul8u_trunc4"},
+         8.666534423828125, 0.1979726934215971),
+        ({"lin_a": "mul8u_exact", "lin_b": "mul8u_trunc2"},
+         39.7521858215332, 0.2676096400496483),
+        ({"lin_a": "mul8u_exact", "lin_b": "mul8u_trunc4"},
+         11.416650772094727, 0.3984795200661978),
+    ]
+    assert len(res.heterogeneous) == len(expected)
+    for p, (assign, acc, pw) in zip(res.heterogeneous, expected):
+        assert dict(p.assignment) == assign
+        assert p.accuracy == acc
+        assert p.network_rel_power == pw
+    assert res.selected is not None
+    assert res.selected.accuracy == 8.694466590881348
+    # per-layer stage-1 rows are the exact sweep, pinned
+    by_cell = {(p.multiplier, p.layer): p.accuracy for p in res.per_layer}
+    assert by_cell[("mul8u_exact", "lin_a")] == 0.12060081958770752
+    assert by_cell[("mul8u_trunc4", "lin_a")] == 8.670662879943848
+    assert by_cell[("mul8u_trunc4", "lin_b")] == 11.416650772094727
+    assert by_cell[("mul8u_trunc2", "lin_a")] == 8.694466590881348
+    assert by_cell[("mul8u_trunc2", "lin_b")] == 39.7521858215332
+    # JSON surface unchanged: no surrogate key on the exact path, and
+    # a faithful round-trip
+    d = res.to_json_dict()
+    assert sorted(d.keys()) == [
+        "all_layers", "baseline_accuracy", "baseline_metrics",
+        "heterogeneous", "objective_directions", "objectives",
+        "per_layer", "primary", "selected"]
+    from repro.approx.dse import ExploreResult
+    assert ExploreResult.from_json_dict(d).to_json_dict() == d

@@ -1,0 +1,79 @@
+"""Shared rank-correlation helpers (repro.approx.ranking) validated
+against scipy on small cases — the satellite that lets the surrogate
+fidelity gates and the library rank analyses share one tie-aware
+Spearman/Kendall implementation."""
+import numpy as np
+import pytest
+
+from repro.approx.ranking import (kendall, per_layer_spearman, rankdata,
+                                  spearman)
+
+scipy_stats = pytest.importorskip("scipy.stats")
+
+
+CASES = [
+    [1.0, 2.0, 3.0, 4.0, 5.0],
+    [5.0, 3.0, 1.0, 4.0, 2.0],
+    [1.0, 2.0, 2.0, 3.0],            # interior tie
+    [0.0, 0.0, 1.0, 1.0, 2.0],       # tied groups
+    [3.5, -1.0, 2.0, 2.0, 2.0, 9.0],
+    list(np.random.default_rng(0).normal(size=12)),
+    list(np.random.default_rng(1).integers(0, 4, size=10).astype(float)),
+]
+
+
+@pytest.mark.parametrize("x", CASES)
+def test_rankdata_matches_scipy(x):
+    np.testing.assert_allclose(
+        rankdata(x), scipy_stats.rankdata(x, method="average"))
+
+
+@pytest.mark.parametrize("i", range(len(CASES) - 1))
+def test_spearman_matches_scipy(i):
+    x, y = CASES[i], CASES[i + 1][:len(CASES[i])]
+    x, y = x[:len(y)], y[:len(x)]
+    expected = scipy_stats.spearmanr(x, y).statistic
+    assert spearman(x, y) == pytest.approx(expected, abs=1e-12)
+
+
+@pytest.mark.parametrize("i", range(len(CASES) - 1))
+def test_kendall_matches_scipy(i):
+    x, y = CASES[i], CASES[i + 1][:len(CASES[i])]
+    x, y = x[:len(y)], y[:len(x)]
+    expected = scipy_stats.kendalltau(x, y).statistic
+    assert kendall(x, y) == pytest.approx(expected, abs=1e-12)
+
+
+def test_perfect_and_inverted_orderings():
+    x = [1.0, 2.0, 3.0, 4.0]
+    assert spearman(x, x) == pytest.approx(1.0)
+    assert spearman(x, x[::-1]) == pytest.approx(-1.0)
+    assert kendall(x, x) == pytest.approx(1.0)
+    assert kendall(x, x[::-1]) == pytest.approx(-1.0)
+
+
+def test_constant_inputs_are_nan():
+    # no ordering to correlate: scipy's convention, and the explicit
+    # contract the fidelity gates filter on
+    assert np.isnan(spearman([1.0, 1.0, 1.0], [1.0, 2.0, 3.0]))
+    assert np.isnan(kendall([1.0, 2.0, 3.0], [2.0, 2.0, 2.0]))
+    assert np.isnan(spearman([1.0], [2.0]))
+    assert np.isnan(kendall([], []))
+
+
+def test_length_mismatch_raises():
+    with pytest.raises(ValueError):
+        spearman([1.0, 2.0], [1.0, 2.0, 3.0])
+    with pytest.raises(ValueError):
+        rankdata(np.zeros((2, 2)))
+
+
+def test_per_layer_spearman_keys_and_values():
+    pred = np.array([[1.0, 2.0, 3.0], [3.0, 2.0, 1.0], [1.0, 1.0, 1.0]])
+    meas = np.array([[10.0, 20.0, 30.0], [1.0, 2.0, 3.0], [0.0, 1.0, 2.0]])
+    got = per_layer_spearman(pred, meas, ["a", "b", "c"])
+    assert got["a"] == pytest.approx(1.0)
+    assert got["b"] == pytest.approx(-1.0)
+    assert np.isnan(got["c"])       # constant predicted row
+    with pytest.raises(ValueError):
+        per_layer_spearman(pred, meas[:2], ["a", "b", "c"])

@@ -1,0 +1,237 @@
+"""Surrogate predict stage (DESIGN.md §2.11): feature extraction,
+fit/predict/calibration, the LayerComponents factory with exact
+measured-cell overrides, and the explore_heterogeneous wiring."""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.dse import explore_heterogeneous
+from repro.approx.layers import ApproxPolicy
+from repro.approx.ranking import spearman
+from repro.approx.specs import BackendSpec
+from repro.approx.surrogate import (FEATURE_NAMES, STRUCTURE_SLICE,
+                                    SurrogateConfig, circuit_features,
+                                    feature_matrix, fit_surrogate,
+                                    surrogate_components, train_subset)
+from repro.approx.workload import logit_fidelity
+from repro.core.library import build_default_library
+
+LAYERS = ("lin_a", "lin_b")
+COUNTS = {"lin_a": 100, "lin_b": 300}
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return build_default_library("tiny")
+
+
+@pytest.fixture(scope="module")
+def names(lib):
+    return [e.name for e in lib.select(kind="multiplier", width=8)]
+
+
+@pytest.fixture(scope="module")
+def toy_workload():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w_a = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    w_b = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+
+    def forward(policy, xb):
+        y = policy.matmul("lin_a", xb, w_a)
+        return policy.matmul("lin_b", jax.nn.relu(y), w_b)
+
+    return logit_fidelity(forward, [x], layer_counts=dict(COUNTS))
+
+
+def _synthetic_rows(lib, names):
+    """Duck-typed sweep rows (the DesignPoint-corpus contract: only
+    .layer/.multiplier/.accuracy are read) whose drop is a smooth
+    monotone function of the error features — learnable by
+    construction."""
+    rows = []
+    for n in names:
+        e = lib.entry(n)
+        d = 2.0 * np.log1p(e.errors.mae) + 0.5 * np.log1p(e.errors.wce)
+        for scale, layer in zip((1.0, 0.4), LAYERS):
+            rows.append(SimpleNamespace(layer=layer, multiplier=n,
+                                        accuracy=1.0 - scale * d))
+    rows.append(SimpleNamespace(layer="all", multiplier=names[0],
+                                accuracy=0.0))        # must be ignored
+    return rows
+
+
+# ----------------------------------------------------------------------
+# Features
+# ----------------------------------------------------------------------
+def test_feature_vector_shape_and_exact_entry(lib):
+    v = circuit_features(lib.entry("mul8u_exact"))
+    assert v.shape == (len(FEATURE_NAMES),)
+    fx = dict(zip(FEATURE_NAMES, v))
+    # the exact multiplier has zero error and unit relative power
+    for m in ("er", "mae", "mse", "mre", "wce", "wcre"):
+        assert fx[f"log1p_{m}"] == 0.0
+    assert fx["rel_power"] == pytest.approx(1.0)
+    assert fx["src_exact"] == 1.0 and fx["src_bam"] == 0.0
+    assert fx["width_over_8"] == 1.0
+    # gate fractions sum to 1 over active nodes
+    gate_sum = sum(fx[f"gate_frac_{f}"] for f in range(10))
+    assert gate_sum == pytest.approx(1.0)
+
+
+def test_feature_matrix_discriminates(lib, names):
+    x = feature_matrix([lib.entry(n) for n in names[:10]])
+    assert x.shape == (10, len(FEATURE_NAMES))
+    # no two distinct circuits share a feature vector
+    assert len({tuple(row) for row in x}) == 10
+    # the structure slice excludes the error/cost report columns
+    assert FEATURE_NAMES[STRUCTURE_SLICE][0] == "width_over_8"
+    assert "log1p_mae" not in FEATURE_NAMES[STRUCTURE_SLICE]
+
+
+def test_netlist_structure_features(lib):
+    nl = lib.entry("mul8u_exact").netlist
+    hist = nl.gate_histogram()
+    assert hist.shape == (10,) and hist.sum() == nl.n_active()
+    assert 0 < nl.logic_depth() <= nl.n_active()
+    # truncated multiplier: strictly smaller circuit than exact
+    nl_t = lib.entry("mul8u_trunc4").netlist
+    assert nl_t.gate_histogram().sum() < hist.sum()
+
+
+def test_error_report_as_vector(lib):
+    e = lib.entry("mul8u_trunc4").errors
+    v = e.as_vector()
+    assert v.shape == (6,)
+    assert v[0] == e.er and v[4] == e.wce
+
+
+# ----------------------------------------------------------------------
+# Fit / predict / calibrate
+# ----------------------------------------------------------------------
+def test_fit_surrogate_learns_monotone_target(lib, names):
+    rows = _synthetic_rows(lib, names)
+    pred = fit_surrogate(rows, lib, baseline=1.0, direction="max",
+                         config=SurrogateConfig(epochs=800))
+    assert pred.layers == LAYERS
+    assert pred.val_names
+    assert not set(pred.val_names) & set(pred.train_names)
+    assert len(pred.train_names) + len(pred.val_names) == len(names)
+    d = pred.predict_drop(names, lib)
+    assert d.shape == (2, len(names)) and (d >= 0).all()
+    true = np.array([2.0 * np.log1p(lib.entry(n).errors.mae)
+                     + 0.5 * np.log1p(lib.entry(n).errors.wce)
+                     for n in names])
+    # a smooth monotone target must be rank-recovered on both layers
+    assert spearman(d[0], true) > 0.9
+    assert spearman(d[1], 0.4 * true) > 0.9
+    # quality re-bases drops in the primary's direction
+    q = pred.predict_quality(names, lib)
+    np.testing.assert_allclose(q, 1.0 - d)
+    assert pred.calibration >= 0.0
+    diag = pred.summary()
+    assert diag["holdout"] == "val" and diag["n_val"] == len(pred.val_names)
+    assert set(diag["val_spearman"]) == set(LAYERS)
+
+
+def test_fit_surrogate_min_direction_and_cost_head(lib, names):
+    rows = []
+    for n in names:
+        d = np.log1p(lib.entry(n).errors.mae)
+        rows.append(SimpleNamespace(layer="l0", multiplier=n,
+                                    accuracy=0.1 + d))   # MAE rises
+    pred = fit_surrogate(rows, lib, baseline=0.1, direction="min",
+                         config=SurrogateConfig(epochs=400))
+    q = pred.predict_quality(names, lib)
+    assert (q >= 0.1).all()          # min primary only degrades upward
+    # learned cost head ranks relative power from structure alone
+    rp_true = np.array([lib.entry(n).rel_power for n in names])
+    rp_pred = pred.predict_rel_power(names, lib)
+    assert spearman(rp_pred, rp_true) > 0.8
+    assert np.isfinite(pred.summary()["power_spearman"])
+
+
+def test_fit_surrogate_needs_enough_circuits(lib):
+    rows = _synthetic_rows(lib, ["mul8u_exact", "mul8u_trunc4"])
+    with pytest.raises(ValueError, match=">= 3 circuits"):
+        fit_surrogate(rows, lib, baseline=1.0)
+
+
+def test_train_subset_deterministic_power_spread(lib, names):
+    sub = train_subset(names, lib, 0.25)
+    assert sub == train_subset(names, lib, 0.25)
+    assert len(sub) == int(np.ceil(0.25 * len(names)))
+    rp = [lib.entry(n).rel_power for n in names]
+    # endpoints of the power axis are always measured
+    assert min(names, key=lambda n: (lib.entry(n).rel_power, n)) in sub
+    assert max(names, key=lambda n: (lib.entry(n).rel_power, n)) in sub
+    # floor of 6 (or everything, below that)
+    assert len(train_subset(names[:4], lib, 0.1)) == 4
+    assert len(train_subset(names[:20], lib, 0.05)) == 6
+
+
+# ----------------------------------------------------------------------
+# Components factory + DSE wiring
+# ----------------------------------------------------------------------
+def test_surrogate_components_exact_cells_override(lib, names, toy_workload):
+    sub = names[:16]
+    golden = ApproxPolicy(default=BackendSpec.golden().materialize())
+    baseline = toy_workload.measure(golden)["logit_mae"]
+    comp, pred, rows = surrogate_components(
+        toy_workload, COUNTS, sub, lib, baseline=baseline,
+        direction="min", train_fraction=0.4)
+    assert comp.layers == LAYERS and comp.multipliers == tuple(sub)
+    assert comp.quality.shape == (2, len(sub))
+    # every measured row's cell is the EXACT value, not a prediction
+    li = {l: j for j, l in enumerate(comp.layers)}
+    mi = {m: i for i, m in enumerate(comp.multipliers)}
+    for r in rows:
+        assert comp.quality[li[r.layer], mi[r.multiplier]] == r.accuracy
+    # power is the library's exact accounting for every candidate
+    np.testing.assert_allclose(
+        comp.rel_power, [lib.entry(n).rel_power for n in sub])
+    measured = {r.multiplier for r in rows}
+    assert measured == set(pred.train_names) | set(pred.val_names)
+    assert len(measured) < len(sub)
+
+
+def test_explore_heterogeneous_surrogate_path(lib, names, toy_workload):
+    res = explore_heterogeneous(
+        toy_workload, COUNTS, lib, multipliers=names[:16],
+        quality_bound=10.0, top_k=4,
+        predictor="surrogate", train_fraction=0.4)
+    s = res.surrogate
+    assert s is not None and s["train_fraction"] == 0.4
+    assert s["beam_bound"] == pytest.approx(10.0 + s["calibration"])
+    # stage 1 measured only the training subset
+    assert len(res.per_layer) == len(LAYERS) * (s["n_train"] + s["n_val"])
+    assert len(res.per_layer) < len(LAYERS) * 16
+    # stage 2 is exact: points carry real measurements and assignments
+    assert res.heterogeneous
+    for p in res.heterogeneous:
+        assert p.layer == "hetero" and set(dict(p.assignment)) == set(COUNTS)
+    # the surrogate record round-trips through JSON
+    d = res.to_json_dict()
+    assert "surrogate" in d
+    from repro.approx.dse import ExploreResult
+    rt = ExploreResult.from_json_dict(d)
+    assert rt.to_json_dict() == d
+
+
+def test_exact_path_has_no_surrogate_record(lib, toy_workload):
+    res = explore_heterogeneous(
+        toy_workload, COUNTS, lib,
+        multipliers=["mul8u_exact", "mul8u_trunc4", "mul8u_trunc2"],
+        quality_bound=30.0, top_k=4)
+    assert res.surrogate is None
+    assert "surrogate" not in res.to_json_dict()
+
+
+def test_unknown_predictor_raises(lib, toy_workload):
+    with pytest.raises(ValueError, match="predictor"):
+        explore_heterogeneous(toy_workload, COUNTS, lib,
+                              multipliers=["mul8u_exact"],
+                              predictor="oracle")
