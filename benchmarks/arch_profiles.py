@@ -1,0 +1,216 @@
+"""Model-zoo module-resilience profiler benchmark (DESIGN.md §2.12).
+
+The paper profiles ONE CNN layer-by-layer; this lane profiles the
+model zoo module-by-module.  For each architecture it runs
+``repro.approx.profiles.profile_architecture``: a single-family sweep
+of the committed library over every module family (attention q/k/v/o,
+MLP up/gate/down, MoE experts, SSM projections, cross-attention, ...)
+as ONE banked compiled program, a most-to-least-tolerant family
+ranking, and a per-module policy selected under a declarative
+``MaxDrop`` bound on the workload primary.  Writes
+``benchmarks/results/BENCH_profiles.json`` then enforces four gates
+in-benchmark (record first, so a failed gate still leaves evidence):
+
+  * **coverage** — >= 4 architectures beyond ResNet are profiled,
+    including at least one MoE and one SSM (mamba-bearing) model;
+  * **selection** — every profiled architecture yields a selected
+    per-module policy whose measured drop stays inside ``MaxDrop``;
+  * **bit identity** — on the MoE and SSM reference archs, the banked
+    module sweep (exact-LUT ``fill`` padding) reproduces the
+    sequential golden-base evaluation metric-for-metric;
+  * **single program** — the banked sweep traces exactly ONE program,
+    and a truncated row set traces the same count (O(1) compiled
+    programs per sweep, independent of grid size).
+
+Quick mode (CI) profiles 5 reduced LM archs with a 3-multiplier
+power-spread; full mode widens the library subset and adds
+deepseek-v2-236b (MLA+MoE), llava-next-34b (VLM), nemotron-4-15b and a
+ResNet-8 profile on the paper's own classification workload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.approx.dse import verify_assignments
+from repro.approx.modules import (FILL_EXACT, ModuleMap,
+                                  module_sweep_assignments)
+from repro.approx.profiles import profile_architecture, profile_zoo
+from repro.approx.workload import classification, lm_fidelity
+from repro.core.library import get_default_library
+from repro.launch.compile_cache import trace_audit
+from repro.models import resnet
+
+from .common import emit
+from .resilience_common import case_study_names
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "BENCH_profiles.json")
+
+#: MaxDrop bound on the primary metric (logit_mae vs the f32 / golden
+#: reference).  The all-exact uniform always satisfies it (drop == 0),
+#: so an arch failing the selection gate means the selector broke, not
+#: that the bound was too tight.
+MAX_DROP = 0.05
+MIN_ARCHS_GATE = 4
+
+#: Reduced zoo slices per mode: (arch, model-family label).  Quick
+#: keeps one representative per family axis the gates care about.
+QUICK_ARCHS = [
+    ("qwen1.5-0.5b", "dense"),
+    ("qwen3-moe-30b-a3b", "moe"),
+    ("mamba2-780m", "ssm"),
+    ("jamba-v0.1-52b", "hybrid"),
+    ("whisper-large-v3", "encdec"),
+]
+FULL_EXTRA_ARCHS = [
+    ("deepseek-v2-236b", "moe"),
+    ("llava-next-34b", "vlm"),
+    ("nemotron-4-15b", "dense"),
+]
+#: The bit-identity / trace-count reference archs (satellite: MoE and
+#: mamba2), checked with a 2-multiplier sub-grid to bound wall-clock.
+IDENTITY_ARCHS = ("qwen3-moe-30b-a3b", "mamba2-780m")
+
+
+def _multipliers(lib, quick: bool) -> list[str]:
+    if quick:
+        return ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc3"]
+    names = case_study_names(lib, 5)
+    if "mul8u_exact" not in names:
+        names.insert(0, "mul8u_exact")
+    return names
+
+
+def _lm_workload(arch: str):
+    wl = lm_fidelity(arch, batch=2, seq_len=8, n_batches=1)
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced()
+    mmap = ModuleMap.for_config(cfg, batch=2, seq_len=8)
+    return wl, mmap
+
+
+def _identity_check(wl, mmap, lib, mults) -> dict:
+    """Banked-vs-sequential bit identity + O(1) trace count on one
+    arch's module sweep (the in-benchmark twin of
+    ``tests/test_modules.py``'s gate, run on the shipped library)."""
+    grid = module_sweep_assignments(mmap, mults)
+    lowered = [mmap.lower(a) for _f, _m, a in grid]
+    with trace_audit() as tc_full:
+        banked = verify_assignments(wl, lowered, mmap.layer_counts, lib,
+                                    layers=mmap.layers, fill=FILL_EXACT)
+    sequential = verify_assignments(wl, lowered, mmap.layer_counts, lib,
+                                    batch=False, layers=mmap.layers,
+                                    fill=FILL_EXACT)
+    bit = all(b.metrics == s.metrics
+              and b.network_rel_power == s.network_rel_power
+              for b, s in zip(banked, sequential))
+    with trace_audit() as tc_half:
+        verify_assignments(wl, lowered[:2], mmap.layer_counts, lib,
+                           layers=mmap.layers, fill=FILL_EXACT)
+    return {"bit_identical": bool(bit), "rows": len(lowered),
+            "traced_full": tc_full.traced_programs,
+            "traced_truncated": tc_half.traced_programs}
+
+
+def run(quick: bool = False) -> dict:
+    lib = get_default_library()
+    mults = _multipliers(lib, quick)
+    for n in mults:
+        lib.lut(n)              # warm LUT packing outside the timers
+    emit("profiles/multipliers", 0.0, f"n={len(mults)}")
+
+    archs = QUICK_ARCHS + ([] if quick else FULL_EXTRA_ARCHS)
+    profiles = {}
+    for arch, family in archs:
+        t0 = time.perf_counter()
+        wl, mmap = _lm_workload(arch)
+        prof = profile_architecture(wl, mmap, lib, mults, arch=arch,
+                                    model_family=family,
+                                    max_drop=MAX_DROP)
+        dt = time.perf_counter() - t0
+        sel = (f"power={prof.selected['power']:.3f}"
+               if prof.selected else "none")
+        emit(f"profiles/{arch}", dt * 1e6,
+             f"modules={len(prof.modules)};most_tolerant="
+             f"{prof.ranking[0]};{sel}")
+        profiles[arch] = prof
+
+    if not quick:               # the paper's own family, full runs only
+        cfg = resnet.resnet_config(8)
+        import jax
+        params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+        wl = classification(cfg, params, eval_n=32, batch=32,
+                            fidelity=True)
+        mmap = ModuleMap.for_config(cfg, batch=32)
+        t0 = time.perf_counter()
+        prof = profile_architecture(wl, mmap, lib, mults,
+                                    arch="resnet8-cifar",
+                                    model_family="resnet",
+                                    max_drop=MAX_DROP)
+        emit("profiles/resnet8-cifar", (time.perf_counter() - t0) * 1e6,
+             f"modules={len(prof.modules)}")
+        profiles["resnet8-cifar"] = prof
+
+    identity = {}
+    for arch in IDENTITY_ARCHS:
+        wl, mmap = _lm_workload(arch)
+        t0 = time.perf_counter()
+        identity[arch] = _identity_check(wl, mmap, lib, mults[1:3])
+        emit(f"profiles/identity_{arch}",
+             (time.perf_counter() - t0) * 1e6,
+             f"bit={identity[arch]['bit_identical']};"
+             f"traced={identity[arch]['traced_full']}")
+
+    beyond_resnet = [a for a in profiles if a != "resnet8-cifar"]
+    fam_of = dict(archs)
+    gates = {
+        "coverage": (len(beyond_resnet) >= MIN_ARCHS_GATE
+                     and any(fam_of[a] == "moe" for a in beyond_resnet)
+                     and any(fam_of[a] in ("ssm", "hybrid")
+                             and "ssm.in_proj" in profiles[a].modules
+                             for a in beyond_resnet)),
+        "selection": all(
+            p.selected is not None
+            and p.selected["quality_drop"] <= p.max_drop + 1e-9
+            for p in profiles.values()),
+        "bit_identity": all(c["bit_identical"]
+                            for c in identity.values()),
+        "single_program": all(
+            c["traced_full"] == c["traced_truncated"] == 1
+            for c in identity.values()),
+    }
+
+    record = {
+        "quick": quick,
+        "max_drop": MAX_DROP,
+        "multipliers": mults,
+        "zoo": profile_zoo(profiles),
+        "identity_checks": identity,
+        "gates": gates,
+    }
+    os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("profiles/bench_record", 0.0, BENCH_PATH)
+
+    failed = sorted(g for g, ok in gates.items() if not ok)
+    if failed:
+        raise SystemExit(
+            f"arch_profiles gates failed: {failed} (see {BENCH_PATH})")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI slice: 5 reduced archs, 3 multipliers")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

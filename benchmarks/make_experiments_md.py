@@ -419,6 +419,48 @@ def kernels_table() -> str:
     return "\n".join(rows)
 
 
+PROFILES_PATH = os.path.join(os.path.dirname(__file__), "results",
+                             "BENCH_profiles.json")
+
+
+def profiles_table() -> str:
+    """Model-zoo module-resilience profiles from BENCH_profiles.json
+    (written by `python -m benchmarks.arch_profiles`)."""
+    if not os.path.exists(PROFILES_PATH):
+        return "(run `python -m benchmarks.arch_profiles` first)"
+    with open(PROFILES_PATH) as f:
+        r = json.load(f)
+    archs = r["zoo"]["archs"]
+    idc = r["identity_checks"]
+    rows = [f"{len(archs)} architectures × {len(r['multipliers'])} "
+            f"library multipliers, one banked compiled program per "
+            f"module sweep{' (quick)' if r.get('quick') else ''}.  "
+            f"Selected = cheapest per-module policy with primary-metric "
+            f"drop ≤ {r['max_drop']} (golden-int8 baseline); power is "
+            f"network-relative.", "",
+            "| arch | family | modules | most tolerant | least "
+            "tolerant | selected power% | drop |",
+            "|---|---|---|---|---|---|---|"]
+    for name, p in archs.items():
+        sel = p["selected"]
+        sel_pow = f"{100 * sel['power']:.1f}" if sel else "—"
+        sel_drop = f"{sel['quality_drop']:.4f}" if sel else "—"
+        rows.append(f"| {name} | {p['model_family']} "
+                    f"| {len(p['modules'])} | {p['ranking'][0]} "
+                    f"| {p['ranking'][-1]} | {sel_pow} | {sel_drop} |")
+    fam = sorted(r["zoo"]["family_mean_drop"].items(),
+                 key=lambda kv: kv[1])
+    rows += ["", "| module family | mean drop across zoo |",
+             "|---|---|"]
+    rows += [f"| {f} | {d:.4f} |" for f, d in fam]
+    ident = "; ".join(
+        f"{a}: bit_identical={c['bit_identical']}, "
+        f"{c['rows']}-row sweep traced {c['traced_full']} program(s)"
+        for a, c in idc.items())
+    rows += ["", f"Banked-vs-sequential identity gates — {ident}."]
+    return "\n".join(rows)
+
+
 def replace_section(text: str, marker: str, body: str) -> str:
     begin = f"<!-- BEGIN AUTO {marker} -->"
     end = f"<!-- END AUTO {marker} -->"
@@ -443,6 +485,7 @@ def main() -> None:
     text = replace_section(text, "EVOLVE", evolve_table())
     text = replace_section(text, "KERNELS", kernels_table())
     text = replace_section(text, "DSE", dse_table())
+    text = replace_section(text, "PROFILES", profiles_table())
     with open(path, "w") as f:
         f.write(text)
     ok = sum(1 for r in results if r.get("ok"))

@@ -36,6 +36,9 @@ SUITES = {
                "(BENCH_evolve.json)"),
     "dse": ("benchmarks.dse_surrogate",
             "surrogate-guided vs exact-sweep DSE (BENCH_dse.json)"),
+    "profiles": ("benchmarks.arch_profiles",
+                 "model-zoo module-resilience profiles "
+                 "(BENCH_profiles.json)"),
 }
 
 # module-name aliases: every suite is addressable by its module's

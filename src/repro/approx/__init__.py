@@ -6,8 +6,14 @@ from .objectives import (AtLeast, AtMost, MaxDrop, Objective,
                          ensure_objective, get_objective,
                          register_objective, select, value_of)
 from .workload import (Workload, as_workload, classification,
-                       lm_fidelity, lm_layer_mult_counts, lm_perplexity,
+                       layer_mult_counts, lm_fidelity,
+                       lm_layer_mult_counts, lm_perplexity,
                        logit_fidelity)
+from .modules import (EXACT_FAMILIES, FILL_EXACT, MODULE_FAMILIES,
+                      ModuleMap, module_of, module_policy_bank,
+                      module_sweep_assignments)
+from .profiles import (ArchProfile, ModuleRow, profile_architecture,
+                       profile_zoo)
 from .registry import (Datapath, available_datapaths, composed_product,
                        get_datapath, register_datapath)
 from .specs import (BackendSpec, LutBank, MaterializedBackend, PolicyBank,

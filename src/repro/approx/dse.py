@@ -579,6 +579,8 @@ def verify_assignments(
     assign_sharding=None,
     cache: Optional[dict] = None,
     rel_power=None,
+    layers: Optional[tuple] = None,
+    fill: Optional[str] = None,
 ) -> list[DesignPoint]:
     """Verification stage: measure every candidate assignment EXACTLY.
 
@@ -589,14 +591,22 @@ def verify_assignments(
     cache.  Either way results land in ``cache`` under
     sequential-compatible policy keys, and power is the exact
     count-weighted ``network_power_for_assignment``.
+
+    ``layers`` pins the bank's layer axis explicitly and ``fill`` pads
+    partially-covering rows with a named multiplier — the module-axis
+    lowering path (DESIGN.md §2.12) passes the full tag axis plus
+    ``fill="mul8u_exact"`` so disjoint module-family assignments share
+    one banked program while staying bit-identical to a golden-base
+    sequential policy.
     """
     if not assignments:
         return []
     wl = as_workload(eval_fn)
-    layers = tuple(dict.fromkeys(
-        l for a in assignments for l in a))
+    if layers is None:
+        layers = tuple(dict.fromkeys(
+            l for a in assignments for l in a))
     pbank = PolicyBank.from_assignments(assignments, library,
-                                        layers=layers)
+                                        layers=layers, fill=fill)
     batch = batch and can_bank(wl, mode, variant)
     if batch:
         out = policy_bank_eval(

@@ -190,3 +190,18 @@ def network_power_for_assignment(
             layers.append(LayerPower(name, count, base_multiplier,
                                      base_rel_power))
     return network_relative_power(layers)
+
+
+def grouped_mult_counts(layer_counts: Mapping[str, int],
+                        groups: Mapping[str, str]) -> dict[str, int]:
+    """Aggregate per-layer MAC counts by a group key — e.g. module
+    families via ``repro.approx.modules.ModuleMap.layer_module``
+    (DESIGN.md §2.12).  Grouped counts drop into the same
+    ``network_power_for_assignment`` / ``LayerComponents`` arithmetic
+    as per-layer counts: power is linear in counts, so summing within
+    a group before weighting is exact."""
+    out: dict[str, int] = {}
+    for layer, count in layer_counts.items():
+        g = groups[layer]
+        out[g] = out.get(g, 0) + int(count)
+    return out

@@ -470,14 +470,21 @@ class PolicyBank:
 
     @staticmethod
     def from_assignments(assignments, library=None,
-                         layers=None, block_m: int = 512) -> "PolicyBank":
+                         layers=None, block_m: int = 512,
+                         fill: Optional[str] = None) -> "PolicyBank":
         """Pack layer->multiplier mappings into one shared bank.
 
         ``assignments`` is a sequence of dicts; ``layers`` defaults to
         the union of their keys in first-appearance order.  Every
         mapping must cover every layer (partial policies are expressed
-        by leaving the layer out of ``layers``, not out of one row).
-        The distinct multiplier names are deduplicated into a single
+        by leaving the layer out of ``layers``, not out of one row) —
+        unless ``fill`` names a multiplier, in which case a row's
+        unassigned layers run that multiplier.  ``fill="mul8u_exact"``
+        keeps filled lanes bit-identical to the golden-int8 base the
+        sequential evaluations default to (the exact 8-bit LUT computes
+        the same products), which is how module-family assignments with
+        disjoint layer coverage share one bank (DESIGN.md §2.12).  The
+        distinct multiplier names are deduplicated into a single
         ``bank_for``-cached ``LutBank``.
         """
         assignments = list(assignments)
@@ -489,18 +496,23 @@ class PolicyBank:
                         layers.append(name)
         layers = tuple(layers)
         names: list[str] = []
+        rows: list[Mapping[str, str]] = []
         for a in assignments:
             missing = [l for l in layers if l not in a]
-            if missing:
+            if missing and fill is None:
                 raise ValueError(
-                    f"assignment {a!r} misses layers {missing}")
+                    f"assignment {a!r} misses layers {missing} "
+                    "(pass fill=<multiplier name> to pad partial rows)")
+            row = dict(a) if not missing else {
+                **{l: fill for l in missing}, **a}
+            rows.append(row)
             for l in layers:
-                if a[l] not in names:
-                    names.append(a[l])
+                if row[l] not in names:
+                    names.append(row[l])
         bank = bank_for(names, library, block_m=block_m)
         index = {n: i for i, n in enumerate(bank.names)}
-        assign = np.asarray([[index[a[l]] for l in layers]
-                             for a in assignments], dtype=np.int32)
+        assign = np.asarray([[index[r[l]] for l in layers]
+                             for r in rows], dtype=np.int32)
         return PolicyBank(bank=bank, layers=layers, assign=assign)
 
     @staticmethod

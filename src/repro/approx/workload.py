@@ -264,7 +264,10 @@ def _lm_setup(cfg, params, seed: int):
     """Resolve (cfg, params, model fns) for the LM adapters; ``cfg``
     may be an ``LMConfig`` or a registered arch name (resolved through
     ``repro.configs.get_config(...).reduced()`` so adapters stay
-    smoke-test sized by default)."""
+    smoke-test sized by default).  Every registered family works —
+    non-token inputs (whisper frame embeddings, llava image embeddings)
+    come from ``registry.input_extras`` and are merged into each eval
+    batch."""
     import jax
 
     from repro.models.registry import model_fns
@@ -272,12 +275,6 @@ def _lm_setup(cfg, params, seed: int):
     if isinstance(cfg, str):
         from repro.configs import get_config
         cfg = get_config(cfg).reduced()
-    if cfg.family == "encdec":
-        raise ValueError(
-            "the LM workload adapters drive decoder-family configs "
-            "(dense/moe/ssm/hybrid/vlm); encoder-decoder models need "
-            "audio/encoder inputs — build a logit_fidelity workload "
-            "with your own forward closure instead")
     fns = model_fns(cfg)
     if params is None:
         params = fns.init_params(jax.random.PRNGKey(seed), cfg)
@@ -289,40 +286,212 @@ def _lm_token_batches(cfg, batch: int, seq_len: int, n_batches: int,
     import jax.numpy as jnp
 
     from repro.data.synthetic import token_stream
+    from repro.models.registry import input_extras
 
+    extras = input_extras(cfg, batch)
     out = []
     for i in range(n_batches):
         tokens, targets = token_stream(cfg.vocab, batch, seq_len,
                                        step=i, seed=seed)
         out.append({"tokens": jnp.asarray(tokens),
-                    "targets": jnp.asarray(targets)})
+                    "targets": jnp.asarray(targets), **extras})
     return out
 
 
-def lm_layer_mult_counts(cfg, batch: int, seq_len: int) -> dict[str, int]:
-    """Per-layer-tag multiplication counts for a dense decoder forward
-    (the power model's weights).  Layer *tags* are shared across the
-    scanned blocks ("attn.wq", "ffn.wi", ...; see
-    ``repro.models.common``), so each tag's count aggregates over all
-    ``n_layers`` — a per-tag policy override applies to that projection
-    in EVERY block, and its power share accounts for all of them.
-    Families with mixers beyond attention (ssm/moe/hybrid) should pass
-    explicit counts for their extra tags."""
-    from .layers import dense_mult_count
+# ----------------------------------------------------------------------
+# Unified MAC accounting (the Workload.layer_counts protocol;
+# DESIGN.md §2.12)
+# ----------------------------------------------------------------------
+def _merge_counts(dst: dict, src: Mapping[str, int], scale: int = 1):
+    for tag, c in src.items():
+        dst[tag] = dst.get(tag, 0) + int(c) * scale
 
-    t = batch * seq_len
+
+def _attn_counts(cfg, t: int, prefix: str = "attn") -> dict[str, int]:
+    from .layers import dense_mult_count
     d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        f"{prefix}.wq": dense_mult_count((t, d), (d, h * hd)),
+        f"{prefix}.wk": dense_mult_count((t, d), (d, hk * hd)),
+        f"{prefix}.wv": dense_mult_count((t, d), (d, hk * hd)),
+        f"{prefix}.wo": dense_mult_count((t, h * hd), (h * hd, d)),
+    }
+
+
+def _mla_counts(cfg, t: int) -> dict[str, int]:
+    from .layers import dense_mult_count
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora, cfg.kv_lora
+    return {
+        "mla.wdq": dense_mult_count((t, d), (d, ql)),
+        "mla.wuq": dense_mult_count((t, ql), (ql, h * dn)),
+        "mla.wqr": dense_mult_count((t, ql), (ql, h * dr)),
+        "mla.wdkv": dense_mult_count((t, d), (d, kl)),
+        "mla.wuk": dense_mult_count((t, kl), (kl, h * dn)),
+        "mla.wuv": dense_mult_count((t, kl), (kl, h * dv)),
+        "mla.wkr": dense_mult_count((t, d), (d, dr)),
+        "mla.wo": dense_mult_count((t, h * dv), (h * dv, d)),
+    }
+
+
+def _ffn_counts(cfg, t: int, prefix: str = "ffn",
+                d_ff: Optional[int] = None) -> dict[str, int]:
+    from .layers import dense_mult_count
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
     counts = {
-        "attn.wq": dense_mult_count((t, d), (d, h * hd)),
-        "attn.wk": dense_mult_count((t, d), (d, hk * hd)),
-        "attn.wv": dense_mult_count((t, d), (d, hk * hd)),
-        "attn.wo": dense_mult_count((t, h * hd), (h * hd, d)),
-        "ffn.wi": dense_mult_count((t, d), (d, cfg.d_ff)),
-        "ffn.wo": dense_mult_count((t, cfg.d_ff), (cfg.d_ff, d)),
+        f"{prefix}.wi": dense_mult_count((t, d), (d, f)),
+        f"{prefix}.wo": dense_mult_count((t, f), (f, d)),
     }
     if cfg.act == "silu":
-        counts["ffn.wg"] = dense_mult_count((t, d), (d, cfg.d_ff))
-    return {k: v * cfg.n_layers for k, v in counts.items()}
+        counts[f"{prefix}.wg"] = dense_mult_count((t, d), (d, f))
+    return counts
+
+
+def _moe_counts(cfg, t: int) -> dict[str, int]:
+    """Expert MACs mirror the sort-based dispatch exactly: every expert
+    processes its full capacity buffer (zero-padded slots multiply
+    too), so the per-projection cost is ``nb * E * C * d * f`` with the
+    same blocked/unblocked capacity arithmetic as ``models.moe``.  The
+    router einsum stays exact (f32) and carries no approximate MACs."""
+    import math
+    e, k, d = cfg.n_experts, cfg.top_k, cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    nb = cfg.moe_blocks
+    if nb > 1 and t % nb == 0 and t // nb >= k:
+        tb = t // nb
+    else:
+        nb, tb = 1, t
+    cap = int(min(tb * k,
+                  max(math.ceil(tb * k / e * cfg.capacity_factor), 4)))
+    per = nb * e * cap
+    counts = {"moe.wi": per * d * f, "moe.wo": per * f * d}
+    if cfg.act == "silu":
+        counts["moe.wg"] = per * d * f
+    if cfg.n_shared_experts > 0:
+        counts.update(_ffn_counts(cfg, t, prefix="moe.shared",
+                                  d_ff=f * cfg.n_shared_experts))
+    return counts
+
+
+def _mamba_counts(cfg, t: int) -> dict[str, int]:
+    from .layers import dense_mult_count
+
+    from repro.models.mamba2 import ssm_dims
+    dd = ssm_dims(cfg)
+    d, di = cfg.d_model, dd["d_inner"]
+    d_proj = 2 * di + 2 * dd["n"] + dd["n_heads"]
+    return {
+        "mamba.in_proj": dense_mult_count((t, d), (d, d_proj)),
+        "mamba.out_proj": dense_mult_count((t, di), (di, d)),
+    }
+
+
+def _encdec_mult_counts(cfg, batch: int, seq_len: int) -> dict[str, int]:
+    from .layers import dense_mult_count
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    t_enc = batch * cfg.enc_frames
+    t_dec = batch * seq_len
+    counts: dict[str, int] = {}
+    _merge_counts(counts, _attn_counts(cfg, t_enc, prefix="enc.attn"),
+                  cfg.n_enc_layers)
+    _merge_counts(counts, _ffn_counts(cfg, t_enc, prefix="enc.ffn"),
+                  cfg.n_enc_layers)
+    _merge_counts(counts, _attn_counts(cfg, t_dec, prefix="dec.attn"),
+                  cfg.n_layers)
+    _merge_counts(counts, _ffn_counts(cfg, t_dec, prefix="dec.ffn"),
+                  cfg.n_layers)
+    # Cross-attention: queries/output over decoder positions, cross-KV
+    # over encoder frames, once per decoder layer.
+    _merge_counts(counts, {
+        "xattn.wq": dense_mult_count((t_dec, d), (d, h * hd)),
+        "xattn.wk": dense_mult_count((t_enc, d), (d, h * hd)),
+        "xattn.wv": dense_mult_count((t_enc, d), (d, h * hd)),
+        "xattn.wo": dense_mult_count((t_dec, h * hd), (h * hd, d)),
+    }, cfg.n_layers)
+    return counts
+
+
+def _resnet_mult_counts(cfg, batch: int) -> dict[str, int]:
+    from .layers import conv_mult_count, dense_mult_count
+    counts: dict[str, int] = {}
+    size = cfg.image_size
+    counts["conv_init"] = conv_mult_count((batch, size, size, 3),
+                                          (3, 3, 3, cfg.widths[0]))
+    cin = cfg.widths[0]
+    for s, width in enumerate(cfg.widths):
+        for b in range(cfg.n_blocks):
+            stride = 2 if (s > 0 and b == 0) else 1
+            out_size = size // stride
+            counts[f"s{s}_b{b}_conv1"] = conv_mult_count(
+                (batch, size, size, cin), (3, 3, cin, width), stride)
+            counts[f"s{s}_b{b}_conv2"] = conv_mult_count(
+                (batch, out_size, out_size, width), (3, 3, width, width))
+            if cin != width:
+                counts[f"s{s}_b{b}_proj"] = conv_mult_count(
+                    (batch, size, size, cin), (1, 1, cin, width), stride)
+            size = out_size
+            cin = width
+    counts["head"] = dense_mult_count((batch, cfg.widths[-1]),
+                                      (cfg.widths[-1], cfg.n_classes))
+    return counts
+
+
+def layer_mult_counts(cfg, batch: int = 1,
+                      seq_len: int = 16) -> dict[str, int]:
+    """Per-layer-tag multiplication counts for ANY model the repo ships
+    — the single MAC-accounting implementation behind the
+    ``Workload.layer_counts`` protocol (DESIGN.md §2.12).
+
+    ``cfg`` is a ``ResNetConfig`` (``seq_len`` ignored) or any
+    ``LMConfig`` family (dense/moe/ssm/hybrid/vlm/encdec).  Layer tags
+    are shared across scanned blocks ("attn.wq", "moe.wi", ...), so
+    each tag's count aggregates over every block that uses it —
+    mirroring ``models.decoder.block_pattern`` slot by slot — and
+    non-token inputs count the way the adapters feed them
+    (``registry.input_extras``): vlm prefixes ``n_img_tokens`` image
+    positions (plus the ``img_proj`` projection itself), encdec runs
+    the encoder over ``enc_frames`` per batch element.  Exact einsums
+    (norms, attention scores, the MoE router, the SSM scan) carry no
+    approximate MACs and do not appear."""
+    if hasattr(cfg, "widths"):          # ResNetConfig, without an import
+        return _resnet_mult_counts(cfg, batch)
+    if cfg.family == "encdec":
+        return _encdec_mult_counts(cfg, batch, seq_len)
+
+    from repro.models.decoder import block_pattern
+
+    # vlm image embeddings are PREPENDED to the token sequence, so every
+    # decoder projection also runs over those positions.
+    extra = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    t = batch * (seq_len + extra)
+    pattern = block_pattern(cfg)
+    reps = cfg.n_layers // len(pattern)
+    per_group: dict[str, int] = {}
+    for mixer, ffn_kind in pattern:
+        if mixer == "attn":
+            _merge_counts(per_group, _attn_counts(cfg, t))
+        elif mixer == "mla":
+            _merge_counts(per_group, _mla_counts(cfg, t))
+        else:
+            _merge_counts(per_group, _mamba_counts(cfg, t))
+        if ffn_kind == "ffn":
+            _merge_counts(per_group, _ffn_counts(cfg, t))
+        elif ffn_kind == "moe":
+            _merge_counts(per_group, _moe_counts(cfg, t))
+    counts = {tag: c * reps for tag, c in per_group.items()}
+    if cfg.family == "vlm" and cfg.n_img_tokens > 0:
+        from .layers import dense_mult_count
+        counts["img_proj"] = dense_mult_count(
+            (batch * cfg.n_img_tokens, cfg.d_model),
+            (cfg.d_model, cfg.d_model))
+    return counts
+
+
+def lm_layer_mult_counts(cfg, batch: int, seq_len: int) -> dict[str, int]:
+    """Pre-§2.12 name for ``layer_mult_counts`` on LM configs (kept as
+    a shim for existing call sites)."""
+    return layer_mult_counts(cfg, batch=batch, seq_len=seq_len)
 
 
 def lm_fidelity(cfg: Union[str, Any], params=None, *, batch: int = 2,
@@ -334,17 +503,20 @@ def lm_fidelity(cfg: Union[str, Any], params=None, *, batch: int = 2,
     (minimize, primary) + ``top1_agreement`` (maximize), the metric
     pair previously inlined in ``benchmarks/wide_width_pareto.py``, now
     over ANY registered decoder config."""
+    from repro.models.registry import prompt_extra_len
+
     cfg, params, fns = _lm_setup(cfg, params, seed)
     batches = _lm_token_batches(cfg, batch, seq_len, n_batches, seed)
+    max_len = seq_len + prompt_extra_len(cfg, batches[0])
 
     def forward(policy, b):
-        cache = fns.init_cache(cfg, batch, seq_len)
+        cache = fns.init_cache(cfg, batch, max_len)
         logits, _ = fns.forward_prefill(params, b, cache, cfg, policy)
         return logits
 
     return logit_fidelity(
         forward, batches, name=f"lm_fidelity[{cfg.name}]",
-        layer_counts=lm_layer_mult_counts(cfg, batch, seq_len))
+        layer_counts=layer_mult_counts(cfg, batch, seq_len))
 
 
 def lm_perplexity(cfg: Union[str, Any], params=None, *, batch: int = 2,
@@ -374,5 +546,4 @@ def lm_perplexity(cfg: Union[str, Any], params=None, *, batch: int = 2,
                     metrics=("perplexity", "loss"), primary="perplexity",
                     traceable_metrics=traceable_metrics,
                     directions={"perplexity": "min", "loss": "min"},
-                    layer_counts=lm_layer_mult_counts(cfg, batch,
-                                                      seq_len))
+                    layer_counts=layer_mult_counts(cfg, batch, seq_len))

@@ -328,3 +328,20 @@ def policy_sharding(n_policies: int, mesh: Optional[Mesh] = None,
     ``bank_sharding``: non-divisible counts replicate."""
     mesh = mesh if mesh is not None else sweep_mesh()
     return NamedSharding(mesh, bank_pspec(n_policies, mesh, axis))
+
+
+def module_sharding(n_assignments: int, mesh: Optional[Mesh] = None,
+                    axis: str = "sweep") -> NamedSharding:
+    """Sharding for the module-axis profiler's *assignment* axis — the
+    leading dim of a lowered module-assignment matrix (DESIGN.md
+    §2.12).  A module-keyed sweep lowers onto a ``PolicyBank`` whose
+    rows are (family x multiplier) grid cells padded with the exact
+    LUT, so the axis to split is exactly the policy axis: the LUT bank
+    stays replicated while each device evaluates
+    ``n_assignments / n_devices`` module rows.  Pass as
+    ``policy_bank_eval(..., assign_sharding=...)`` /
+    ``profile_architecture(..., assign_sharding=...)``.  Same
+    divisibility policy as ``bank_sharding``: non-divisible counts
+    replicate."""
+    mesh = mesh if mesh is not None else sweep_mesh()
+    return NamedSharding(mesh, bank_pspec(n_assignments, mesh, axis))

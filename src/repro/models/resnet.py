@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.layers import (ApproxPolicy, EXACT_POLICY, conv2d,
-                                 conv_mult_count, dense_mult_count)
+from repro.approx.layers import ApproxPolicy, EXACT_POLICY, conv2d
 from .common import dense_init, split_keys
 
 
@@ -122,25 +121,13 @@ def forward(params, images, cfg: ResNetConfig,
 
 def layer_mult_counts(cfg: ResNetConfig, batch: int = 1) -> dict[str, int]:
     """Per-conv-layer multiplication counts (the paper's Fig. 4 shares).
-    Layer names match the policy tags in ``forward``."""
-    counts: dict[str, int] = {}
-    size = cfg.image_size
-    counts["conv_init"] = conv_mult_count((batch, size, size, 3),
-                                          (3, 3, 3, cfg.widths[0]))
-    cin = cfg.widths[0]
-    for s, width in enumerate(cfg.widths):
-        for b in range(cfg.n_blocks):
-            stride = 2 if (s > 0 and b == 0) else 1
-            out_size = size // stride
-            counts[f"s{s}_b{b}_conv1"] = conv_mult_count(
-                (batch, size, size, cin), (3, 3, cin, width), stride)
-            counts[f"s{s}_b{b}_conv2"] = conv_mult_count(
-                (batch, out_size, out_size, width), (3, 3, width, width))
-            if cin != width:
-                counts[f"s{s}_b{b}_proj"] = conv_mult_count(
-                    (batch, size, size, cin), (1, 1, cin, width), stride)
-            size = out_size
-            cin = width
+    Layer names match the policy tags in ``forward``.  Shim over the
+    unified ``repro.approx.workload.layer_mult_counts`` accounting
+    (DESIGN.md §2.12), preserving the historical conv-only contract —
+    the unified map also counts the ``head`` matmul."""
+    from repro.approx.workload import layer_mult_counts as unified
+    counts = unified(cfg, batch=batch)
+    counts.pop("head", None)
     return counts
 
 

@@ -1,0 +1,211 @@
+"""Module-axis approximation tests (DESIGN.md §2.12): taxonomy
+coverage, lowering onto the per-layer PolicyBank axis, bit-identity of
+module-keyed banked sweeps vs per-layer lowering and vs sequential
+evaluation, and the O(1) trace-count gate on MoE + SSM models."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.approx.dse import verify_assignments
+from repro.approx.modules import (EXACT_FAMILIES, FILL_EXACT,
+                                  MODULE_FAMILIES, ModuleMap, module_of,
+                                  module_policy_bank,
+                                  module_sweep_assignments)
+from repro.approx.specs import PolicyBank
+from repro.approx.workload import layer_mult_counts, lm_fidelity
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+from repro.launch.compile_cache import trace_audit
+
+MULTS = ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc3"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 5):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+# ----------------------------------------------------------------------
+# Taxonomy / classifier
+# ----------------------------------------------------------------------
+def test_module_of_covers_representative_tags():
+    assert module_of("attn.wq") == "attention.q"
+    assert module_of("enc.attn.wk") == "attention.k"
+    assert module_of("dec.attn.wo") == "attention.o"
+    assert module_of("mla.wdq") == "attention.q"
+    assert module_of("mla.wuk") == "attention.k"
+    assert module_of("mla.wkr") == "attention.k"
+    assert module_of("mla.wuv") == "attention.v"
+    assert module_of("mla.wo") == "attention.o"
+    assert module_of("ffn.wi") == "mlp.up"
+    assert module_of("ffn.wg") == "mlp.gate"
+    assert module_of("moe.shared.wo") == "mlp.down"
+    assert module_of("moe.wi") == "moe.expert"
+    assert module_of("moe.wg") == "moe.expert"
+    assert module_of("mamba.in_proj") == "ssm.in_proj"
+    assert module_of("mamba.out_proj") == "ssm.out_proj"
+    assert module_of("xattn.wq") == "cross_attention"
+    assert module_of("img_proj") == "embed"
+    assert module_of("conv_init") == "conv"
+    assert module_of("s1_b0_proj") == "conv"
+    assert module_of("s0_b1_conv2") == "conv"
+    assert module_of("head") == "head"
+
+
+def test_module_of_rejects_unknown_tags():
+    with pytest.raises(ValueError, match="unknown layer tag"):
+        module_of("mystery.w")
+
+
+def test_classifier_lands_in_registered_families():
+    tags = ["attn.wq", "mla.wdkv", "ffn.wo", "moe.wi", "moe.shared.wi",
+            "mamba.in_proj", "xattn.wv", "img_proj", "conv_init", "head"]
+    for t in tags:
+        fam = module_of(t)
+        assert fam in MODULE_FAMILIES
+        assert fam not in EXACT_FAMILIES
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen1.5-0.5b", "qwen3-moe-30b-a3b", "deepseek-v2-236b",
+    "mamba2-780m", "jamba-v0.1-52b", "whisper-large-v3",
+    "llava-next-34b", "nemotron-4-15b"])
+def test_counts_match_probed_call_sites(arch):
+    """The MAC-accounting drift guard: for every zoo family, the
+    counted tags are EXACTLY the call sites one abstract prefill hits,
+    and every tag classifies."""
+    from repro.configs import get_config
+    from repro.models.registry import model_fns, probe_layer_tags
+
+    cfg = get_config(arch).reduced()
+    fns = model_fns(cfg)
+    params = jax.eval_shape(lambda k: fns.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    tags = set(probe_layer_tags(cfg, params))
+    counts = layer_mult_counts(cfg, batch=2, seq_len=8)
+    assert set(counts) == tags
+    mmap = ModuleMap.for_config(cfg, batch=2, seq_len=8, validate=False)
+    assert set(mmap.layer_module.values()) <= set(MODULE_FAMILIES)
+
+
+# ----------------------------------------------------------------------
+# ModuleMap / lowering
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def moe_map():
+    from repro.configs import get_config
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    return cfg, ModuleMap.for_config(cfg, batch=2, seq_len=8)
+
+
+def test_module_map_lowering_and_counts(moe_map):
+    _cfg, mmap = moe_map
+    assert "moe.expert" in mmap.modules
+    lowered = mmap.lower({"moe.expert": "mul8u_trunc3",
+                          "attention.q": "mul8u_trunc6"})
+    assert lowered["moe.wi"] == "mul8u_trunc3"
+    assert lowered["moe.wo"] == "mul8u_trunc3"
+    assert lowered["attn.wq"] == "mul8u_trunc6"
+    assert "attn.wk" not in lowered
+    mc = mmap.module_counts()
+    assert sum(mc.values()) == sum(mmap.layer_counts.values())
+    assert mc["moe.expert"] == sum(
+        mmap.layer_counts[l] for l in mmap.module_layers("moe.expert"))
+    shares = mmap.module_shares()
+    assert sum(shares.values()) == pytest.approx(1.0)
+
+
+def test_lowering_rejects_exact_and_absent_families(moe_map):
+    _cfg, mmap = moe_map
+    with pytest.raises(ValueError, match="exact by design"):
+        mmap.lower({"moe.router": "mul8u_trunc3"})
+    with pytest.raises(ValueError, match="no call sites"):
+        mmap.lower({"conv": "mul8u_trunc3"})
+
+
+def test_module_policy_bank_fill_pads_partial_rows(moe_map, lib):
+    _cfg, mmap = moe_map
+    pbank, lowered = module_policy_bank(
+        mmap, [{"moe.expert": "mul8u_trunc3"}], lib)
+    assert pbank.layers == mmap.layers
+    a = pbank.assignment(0)
+    for l in mmap.module_layers("moe.expert"):
+        assert a[l] == "mul8u_trunc3"
+    for l in set(mmap.layers) - set(mmap.module_layers("moe.expert")):
+        assert a[l] == FILL_EXACT
+    assert lowered[0] == mmap.lower({"moe.expert": "mul8u_trunc3"})
+
+
+def test_from_assignments_without_fill_still_rejects_partial(lib):
+    with pytest.raises(ValueError, match="misses layers"):
+        PolicyBank.from_assignments(
+            [{"a": "mul8u_exact"}], lib, layers=("a", "b"))
+
+
+# ----------------------------------------------------------------------
+# Bit-identity + O(1) banked programs (satellite: MoE and mamba2)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b", "mamba2-780m"])
+def test_module_sweep_bit_identity_and_single_program(arch, lib):
+    """A mixed-module banked sweep is (a) bit-identical to the same
+    assignments evaluated sequentially, (b) bit-identical to the
+    equivalent hand-built per-layer assignment rows, and (c) ONE traced
+    program regardless of the number of module rows."""
+    from repro.configs import get_config
+
+    cfg = get_config(arch).reduced()
+    wl = lm_fidelity(cfg, batch=2, seq_len=8, n_batches=1)
+    mmap = ModuleMap.for_config(cfg, batch=2, seq_len=8)
+    grid = module_sweep_assignments(mmap, MULTS[1:])
+    lowered = [mmap.lower(a) for _f, _m, a in grid]
+
+    with trace_audit() as tc_full:
+        banked = verify_assignments(
+            wl, lowered, mmap.layer_counts, lib,
+            layers=mmap.layers, fill=FILL_EXACT)
+    sequential = verify_assignments(
+        wl, lowered, mmap.layer_counts, lib, batch=False,
+        layers=mmap.layers, fill=FILL_EXACT)
+    # (a) banked == sequential, bit for bit
+    for b, s in zip(banked, sequential):
+        assert b.metrics == s.metrics
+        assert b.network_rel_power == s.network_rel_power
+
+    # (b) module lowering == explicit per-layer PolicyBank assignment
+    explicit = [{l: a.get(l, FILL_EXACT) for l in mmap.layers}
+                for a in lowered]
+    per_layer = verify_assignments(wl, explicit, mmap.layer_counts, lib)
+    for b, p in zip(banked, per_layer):
+        assert b.metrics == p.metrics
+
+    # (c) O(1) compiled programs: fewer rows -> same trace count
+    with trace_audit() as tc_half:
+        verify_assignments(wl, lowered[:2], mmap.layer_counts, lib,
+                           layers=mmap.layers, fill=FILL_EXACT)
+    assert tc_full.traced_programs == tc_half.traced_programs == 1
+
+
+def test_fill_lane_matches_golden_base(lib):
+    """The exact-LUT fill is bit-identical to the golden int8 base the
+    sequential policies default to — the property that makes partial
+    module rows safe inside one bank."""
+    from repro.approx.layers import ApproxPolicy
+    from repro.approx.specs import BackendSpec
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    golden = ApproxPolicy(default=BackendSpec.golden().materialize())
+    filled = ApproxPolicy(default=BackendSpec.golden().materialize(),
+                          overrides=[("m", BackendSpec(
+                              mode="lut", multiplier=FILL_EXACT
+                          ).materialize(lib))])
+    assert bool(jnp.all(golden.matmul("m", x, w)
+                        == filled.matmul("m", x, w)))

@@ -1,0 +1,112 @@
+"""Model-zoo resilience profiler tests (DESIGN.md §2.12):
+profile_architecture end to end on a tiny dense LM, selection under the
+declarative MaxDrop constraint, ranking sanity, and serialization."""
+import jax.numpy as jnp
+import pytest
+
+from repro.approx.layers import ApproxPolicy
+from repro.approx.modules import ModuleMap
+from repro.approx.profiles import (ArchProfile, ModuleRow,
+                                   profile_architecture, profile_zoo)
+from repro.approx.specs import BackendSpec
+from repro.approx.workload import lm_fidelity
+from repro.core.families import truncated_multiplier
+from repro.core.library import ApproxLibrary
+from repro.core.seeds import array_multiplier
+from repro.models.common import LMConfig
+
+MULTS = ["mul8u_exact", "mul8u_trunc6", "mul8u_trunc3"]
+
+
+@pytest.fixture(scope="module")
+def lib():
+    lib = ApproxLibrary()
+    exact = array_multiplier(8)
+    lib.add_netlist(exact, "multiplier", 8, "exact", exact,
+                    name="mul8u_exact")
+    for k in (2, 5):
+        lib.add_netlist(truncated_multiplier(8, k), "multiplier", 8,
+                        "truncation", exact)
+    return lib
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LMConfig(name="tiny-dense", family="dense", n_layers=2,
+                    d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab=128, head_dim=16, dtype=jnp.float32,
+                    remat=False, loss_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def profile(tiny_cfg, lib):
+    wl = lm_fidelity(tiny_cfg, batch=2, seq_len=8, n_batches=1)
+    mmap = ModuleMap.for_config(tiny_cfg, batch=2, seq_len=8)
+    return profile_architecture(wl, mmap, lib, MULTS, arch="tiny-dense",
+                                model_family="dense", max_drop=0.05), \
+        wl, mmap
+
+
+def test_profile_sweeps_every_family_x_multiplier(profile):
+    prof, _wl, mmap = profile
+    assert prof.modules == mmap.modules
+    assert len(prof.rows) == len(mmap.modules) * len(MULTS)
+    seen = {(r.module, r.multiplier) for r in prof.rows}
+    assert seen == {(f, m) for f in mmap.modules for m in MULTS}
+    for r in prof.rows:
+        assert r.quality_drop >= 0.0
+        assert 0.0 < r.mult_share < 1.0
+        # single-family exact rows sit at golden power
+        if r.multiplier == "mul8u_exact":
+            assert r.network_rel_power == pytest.approx(1.0)
+
+
+def test_profile_ranking_orders_by_mean_drop(profile):
+    prof, _wl, _mmap = profile
+    assert set(prof.ranking) == set(prof.modules)
+    mean = {f: sum(r.quality_drop for r in prof.rows if r.module == f)
+            / len(MULTS) for f in prof.modules}
+    drops = [mean[f] for f in prof.ranking]
+    assert drops == sorted(drops)
+
+
+def test_profile_selection_satisfies_max_drop(profile):
+    prof, wl, mmap = profile
+    assert prof.selected is not None
+    assert set(prof.selected["modules"]) == set(mmap.modules)
+    assert prof.selected["quality_drop"] <= prof.max_drop + 1e-9
+    assert prof.selected["power"] <= 1.0 + 1e-9
+    # the selected per-module policy re-measures to its recorded metrics
+    lowered = mmap.lower(prof.selected["modules"])
+    assert prof.selected["layers"] == lowered
+
+
+def test_profile_selection_infeasible_bound_falls_back_to_exact(
+        tiny_cfg, lib):
+    wl = lm_fidelity(tiny_cfg, batch=2, seq_len=8, n_batches=1)
+    mmap = ModuleMap.for_config(tiny_cfg, batch=2, seq_len=8)
+    prof = profile_architecture(wl, mmap, lib, MULTS, max_drop=0.0)
+    # drop <= 0 still admits the all-exact uniform (drop == 0, power 1)
+    assert prof.selected is not None
+    assert set(prof.selected["modules"].values()) == {"mul8u_exact"}
+
+
+def test_profile_round_trips_through_json(profile):
+    import json
+    prof, _wl, _mmap = profile
+    zoo = profile_zoo({"tiny-dense": prof})
+    blob = json.loads(json.dumps(zoo))
+    back = ArchProfile.from_dict(blob["archs"]["tiny-dense"])
+    assert back.ranking == prof.ranking
+    assert back.selected == prof.selected
+    assert [r.to_dict() for r in back.rows] \
+        == [r.to_dict() for r in prof.rows]
+    assert set(blob["family_mean_drop"]) == set(prof.modules)
+
+
+def test_profile_baseline_is_golden_int8(profile):
+    prof, wl, _mmap = profile
+    golden = ApproxPolicy(default=BackendSpec.golden().materialize())
+    assert prof.baseline_metrics == wl.measure(golden)
+    assert prof.primary == "logit_mae"
+    assert prof.direction == "min"

@@ -206,11 +206,31 @@ def test_lm_perplexity_on_tiny_decoder(tiny_cfg):
     assert wl.primary_direction == "min"
 
 
-def test_lm_adapter_rejects_encdec():
-    with pytest.raises(ValueError, match="decoder-family"):
-        lm_fidelity(LMConfig(name="w", family="encdec", n_layers=2,
-                             d_model=32, n_heads=2, n_kv_heads=2,
-                             d_ff=64, vocab=128))
+def test_lm_adapter_supports_encdec():
+    # §2.12: the adapters feed registry.input_extras (frame embeddings)
+    # so whisper-family configs run through lm_fidelity unchanged.
+    cfg = LMConfig(name="w", family="encdec", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=128,
+                   head_dim=16, n_enc_layers=2, enc_frames=8,
+                   use_rope=False, act="gelu", dtype=jnp.float32,
+                   remat=False, loss_chunk=16)
+    wl = lm_fidelity(cfg, batch=1, seq_len=8, n_batches=1)
+    assert {"enc.attn.wq", "dec.attn.wq", "xattn.wk",
+            "enc.ffn.wi"} <= set(wl.layer_counts)
+    m = wl.measure(EXACT_POLICY)
+    # reference logits are computed eagerly, the measurement jitted —
+    # f32 contraction-order noise only
+    assert m["logit_mae"] < 1e-6 and m["top1_agreement"] == 1.0
+
+
+def test_unified_layer_mult_counts_covers_resnet_head():
+    from repro.approx.workload import layer_mult_counts
+    from repro.models.resnet import ResNetConfig, layer_mult_counts as shim
+    cfg = ResNetConfig()
+    unified = layer_mult_counts(cfg)
+    legacy = shim(cfg)
+    assert unified["head"] == cfg.widths[-1] * cfg.n_classes
+    assert {k: v for k, v in unified.items() if k != "head"} == legacy
 
 
 def test_lm_layer_mult_counts_scale_with_layers(tiny_cfg):
